@@ -1,0 +1,60 @@
+"""Beyond-paper: testing the paper's §8 conjecture.
+
+"We conjecture ... that of minimizing the overall utilization complexity,
+and that of minimizing the overall system delay or bottlenecks, are
+closely related, and a solution minimizing one of these objectives is
+expected to perform well also for the other."
+
+We solve both objectives exactly — phi (SOAR) and lambda (our
+Pareto-frontier bottleneck DP, core/bottleneck.py) — and report, per
+scenario, the cross-objective regret:
+
+  phi-regret of lambda*-placement  = phi(U_lambda) / phi(U_phi)
+  lambda-regret of phi*-placement  = lambda(U_phi) / lambda(U_lambda)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import all_red, bt, phi, sample_load, soar_fast
+from repro.core.bottleneck import bottleneck_phi, solve_bottleneck
+
+from .common import fmt_table, write_csv
+
+SCENARIOS = [(64, "constant"), (64, "exponential"), (128, "constant"),
+             (128, "linear")]
+KS = (2, 4, 8)
+REPS = 5
+
+
+def run(scenarios=SCENARIOS, ks=KS, reps: int = REPS, quiet: bool = False):
+    rows = []
+    for n, scheme in scenarios:
+        t = bt(n, scheme)
+        for dist in ("power-law", "uniform"):
+            for k in ks:
+                lam_regret, phi_regret = [], []
+                for r in range(reps):
+                    L = sample_load(t, dist, seed=100 + r)
+                    u_phi = soar_fast(t, L, k).blue
+                    u_lam, lam_opt = solve_bottleneck(t, L, k)
+                    phi_opt = phi(t, L, u_phi)
+                    lam_regret.append(
+                        bottleneck_phi(t, L, u_phi) / lam_opt)
+                    phi_regret.append(phi(t, L, u_lam) / phi_opt)
+                rows.append([n, scheme, dist, k,
+                             float(np.mean(lam_regret)),
+                             float(np.max(lam_regret)),
+                             float(np.mean(phi_regret))])
+    header = ["n", "rates", "load", "k", "lam_regret_of_phi*",
+              "lam_regret_max", "phi_regret_of_lam*"]
+    write_csv("beyond_bottleneck.csv", header, rows)
+    # conjecture quantified: regrets should be small (< 2x mean)
+    assert all(r[4] < 2.5 and r[6] < 2.5 for r in rows), rows
+    if not quiet:
+        print(fmt_table(header, rows, max_rows=len(rows)))
+    return header, rows
+
+
+if __name__ == "__main__":
+    run()

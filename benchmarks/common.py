@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: CSV emission, timing, output locations."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from contextlib import contextmanager
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    path = out_path(name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def fmt_table(header: list[str], rows: list[list], max_rows: int = 40) -> str:
+    cols = [header] + [[f"{c:.4f}" if isinstance(c, float) else str(c) for c in r]
+                       for r in rows[:max_rows]]
+    widths = [max(len(r[i]) for r in cols) for i in range(len(header))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)) for r in cols]
+    if len(rows) > max_rows:
+        lines.append(f"... ({len(rows) - max_rows} more rows)")
+    return "\n".join(lines)

@@ -1,0 +1,56 @@
+"""Fig. 6: SOAR vs Top/Max/Level/Random across rate schemes x load dists.
+
+BT(256), k in {1,2,4,8,16,32}, performance normalized to all-red; all-blue
+plotted for reference. 10 repetitions per cell (paper Sec. 5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import STRATEGIES, all_blue, all_red, bt, phi, sample_load, soar_fast
+
+from .common import fmt_table, write_csv
+
+RATE_SCHEMES = ("constant", "linear", "exponential")
+LOADS = ("power-law", "uniform")
+KS = (1, 2, 4, 8, 16, 32)
+REPS = 10
+N_TOTAL = 256
+CONTENDERS = ("top", "max", "level", "random")
+
+
+def run(n_total: int = N_TOTAL, reps: int = REPS, quiet: bool = False):
+    rows = []
+    for scheme in RATE_SCHEMES:
+        t = bt(n_total, scheme)
+        for dist in LOADS:
+            loads = [sample_load(t, dist, seed=r) for r in range(reps)]
+            reds = [phi(t, L, all_red(t)) for L in loads]
+            blue_cost = np.mean(
+                [phi(t, L, all_blue(t)) / r for L, r in zip(loads, reds)]
+            )
+            for k in KS:
+                perf = {"soar": [], **{c: [] for c in CONTENDERS}}
+                for L, red in zip(loads, reds):
+                    perf["soar"].append(soar_fast(t, L, k).cost / red)
+                    for c in CONTENDERS:
+                        m = STRATEGIES[c](t, L, k, seed=17)
+                        perf[c].append(phi(t, L, m) / red)
+                row = [scheme, dist, k] + [
+                    float(np.mean(perf[s])) for s in ("soar",) + CONTENDERS
+                ] + [float(blue_cost)]
+                rows.append(row)
+                # optimality sanity: SOAR beats every contender on average
+                for c in CONTENDERS:
+                    assert np.mean(perf["soar"]) <= np.mean(perf[c]) + 1e-9, (
+                        scheme, dist, k, c)
+    header = ["rates", "load", "k", "soar", "top", "max", "level", "random",
+              "all_blue"]
+    write_csv("fig6_strategies.csv", header, rows)
+    if not quiet:
+        print(fmt_table(header, rows, max_rows=len(rows)))
+    return header, rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Fig. 8: WC / PS use cases — utilization vs byte complexity.
+
+BT(256), constant rates, uniform + power-law loads, k sweep. (a) normalized
+utilization (use-case independent); (b) normalized byte complexity vs
+all-red; (c) byte complexity vs the all-blue solution.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import all_blue, all_red, bt, phi, sample_load, soar_fast
+from repro.core.bytes_model import (ParameterServerModel, WordCountModel,
+                                    byte_complexity)
+
+from .common import fmt_table, write_csv
+
+KS = (1, 2, 4, 8, 16, 32)
+N_TOTAL = 256
+REPS = 5
+
+
+def run(n_total: int = N_TOTAL, reps: int = REPS, quiet: bool = False):
+    t = bt(n_total, "constant")
+    wc = WordCountModel(n_servers=int(5 * len(t.leaves)))
+    ps = ParameterServerModel()
+    rows = []
+    for dist in ("power-law", "uniform"):
+        loads = [sample_load(t, dist, seed=r) for r in range(reps)]
+        red = all_red(t)
+        blue_all = all_blue(t)
+        norm = {
+            "util": [phi(t, L, red) for L in loads],
+            "wc": [byte_complexity(t, L, red, wc.size) for L in loads],
+            "ps": [byte_complexity(t, L, red, ps.size) for L in loads],
+        }
+        blue_ref = {
+            "wc": [byte_complexity(t, L, blue_all, wc.size) for L in loads],
+            "ps": [byte_complexity(t, L, blue_all, ps.size) for L in loads],
+        }
+        for k in KS:
+            util, wcb, psb, wc_vs_blue, ps_vs_blue = [], [], [], [], []
+            for i, L in enumerate(loads):
+                sol = soar_fast(t, L, k)
+                util.append(sol.cost / norm["util"][i])
+                bwc = byte_complexity(t, L, sol.blue, wc.size)
+                bps = byte_complexity(t, L, sol.blue, ps.size)
+                wcb.append(bwc / norm["wc"][i])
+                psb.append(bps / norm["ps"][i])
+                wc_vs_blue.append(bwc / blue_ref["wc"][i])
+                ps_vs_blue.append(bps / blue_ref["ps"][i])
+            rows.append([dist, k, float(np.mean(util)), float(np.mean(wcb)),
+                         float(np.mean(psb)), float(np.mean(wc_vs_blue)),
+                         float(np.mean(ps_vs_blue))])
+    header = ["load", "k", "util_vs_red", "wc_bytes_vs_red", "ps_bytes_vs_red",
+              "wc_bytes_vs_blue", "ps_bytes_vs_blue"]
+    write_csv("fig8_usecases.csv", header, rows)
+    # paper claims: (i) PS byte complexity tracks utilization closely;
+    # (ii) WC approaches the all-blue bound with few blue nodes.
+    for dist, k, util, wcb, psb, wcvb, psvb in rows:
+        assert abs(psb - util) < 0.12, (dist, k, util, psb)
+        if k >= 16:
+            assert wcvb < 1.9, (dist, k, wcvb)
+    if not quiet:
+        print(fmt_table(header, rows, max_rows=len(rows)))
+    return header, rows
+
+
+if __name__ == "__main__":
+    run()

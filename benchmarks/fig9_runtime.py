@@ -1,0 +1,64 @@
+"""Fig. 9: SOAR running time vs network size and budget k.
+
+Paper: serial SOAR-Gather seconds-to-minutes for n<=2048, k<=128; Color is
+~1000x faster than Gather. We time the faithful implementation (the paper's
+serial loop structure) AND our vectorized level-synchronous rewrite — the
+beyond-paper hillclimb whose speedup is reported in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import bt, sample_load
+from repro.core.soar import soar_color, soar_gather
+from repro.core.soar_fast import soar_gather_vectorized
+
+from .common import fmt_table, write_csv
+
+SIZES = (256, 512, 1024, 2048)
+KS = (4, 8, 16, 32, 64, 128)
+REPS = 3
+
+
+def _time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(sizes=SIZES, ks=KS, reps: int = REPS, quiet: bool = False,
+        faithful_limit: int = 2048):
+    rows = []
+    for n in sizes:
+        t = bt(n, "constant")
+        L = sample_load(t, "power-law", seed=0)
+        for k in ks:
+            # the faithful O(n h k^2) loop gets slow; cap its largest cells
+            run_faithful = n * k * k <= faithful_limit * 128 * 128
+            t_gather = (_time(lambda: soar_gather(t, L, k, cap=False), reps)
+                        if run_faithful else float("nan"))
+            t_fast = _time(lambda: soar_gather_vectorized(t, L, k), reps)
+            X_all = soar_gather_vectorized(t, L, k)
+            X = [X_all[v] for v in range(t.n)]
+            t_color = _time(lambda: soar_color(t, L, k, X), reps)
+            rows.append([n, k, t_gather, t_fast, t_color,
+                         (t_gather / t_fast) if run_faithful else float("nan")])
+    header = ["n", "k", "gather_faithful_s", "gather_fast_s", "color_s",
+              "speedup"]
+    write_csv("fig9_runtime.csv", header, rows)
+    # paper claim: Color runs orders of magnitude faster than Gather
+    for n, k, tg, tf, tc, sp in rows:
+        if not np.isnan(tg):
+            assert tc < tg, (n, k, tc, tg)
+    if not quiet:
+        print(fmt_table(header, rows, max_rows=len(rows)))
+    return header, rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,108 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.report_roofline [--dir experiments/dryrun]
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK = 197e12  # bf16 FLOP/s per chip
+
+
+def load(dirname: str):
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        d = json.load(open(f))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def fmt_s(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}u"
+
+
+def roofline_table(cells, mesh="single"):
+    rows = []
+    for (arch, shape, m), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if d["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | skip | — | "
+                        f"{d['reason'][:46]} |")
+            continue
+        r = d["roofline"]
+        c, me, co = r["compute_s"], r["memory_s"], r["collective_s"]
+        dom = r["bottleneck"]
+        mf = d["model_flops"]
+        n = d["n_devices"]
+        ideal = mf / (n * PEAK)
+        bound = r["step_time_lower_bound_s"]
+        frac = ideal / bound if bound else 0.0
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(c)} | {fmt_s(me)} | {fmt_s(co)} | "
+            f"{fmt_s(bound)} | {dom} | {d['useful_flops_ratio']:.2f} | "
+            f"{100*frac:.1f}% |")
+    header = ("| arch | shape | compute_s | memory_s | collective_s | "
+              "bound_s | bottleneck | useful_flops | roofline_frac |\n"
+              "|---|---|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def dryrun_table(cells):
+    rows = []
+    for (arch, shape, m), d in sorted(cells.items()):
+        if d["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {m} | skipped | — | — | — |")
+            continue
+        ma = d.get("memory_analysis", {})
+        arg = ma.get("argument_size_in_bytes", 0) / 1e9
+        tmp = ma.get("temp_size_in_bytes", 0) / 1e9
+        t = d["times"]
+        coll = d["roofline"]["collective_ops"]
+        coll_s = " ".join(f"{k.split('-')[-1]}:{v}" for k, v in
+                          sorted(coll.items()))
+        rows.append(
+            f"| {arch} | {shape} | {m} | ok ({t['compile_s']:.0f}s) | "
+            f"{arg:.1f} | {tmp:.1f} | {coll_s} |")
+    header = ("| arch | shape | mesh | compile | args GB/dev | temp GB/dev | "
+              "collectives (op:count) |\n|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def summary(cells):
+    ok = sum(1 for d in cells.values() if d["status"] == "ok")
+    sk = sum(1 for d in cells.values() if d["status"] == "skipped")
+    er = len(cells) - ok - sk
+    return f"{len(cells)} cells: {ok} ok, {sk} documented skips, {er} errors"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--what", default="all",
+                    choices=["all", "roofline", "dryrun", "summary"])
+    args = ap.parse_args()
+    cells = load(args.dir)
+    if args.what in ("all", "summary"):
+        print(summary(cells))
+    if args.what in ("all", "dryrun"):
+        print("\n### Dry-run matrix\n")
+        print(dryrun_table(cells))
+    if args.what in ("all", "roofline"):
+        print(f"\n### Roofline terms ({args.mesh}-pod)\n")
+        print(roofline_table(cells, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Multi-tenant NaaS scenario (paper Sec. 5.2): workloads arrive online,
+each gets at most k aggregation switches, and every switch has a bounded
+aggregation capacity a(s). Compares SOAR against the contending strategies
+and shows the capacity-exhaustion effect the paper reports.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_placement.py
+"""
+import numpy as np
+
+from repro.core import bt
+from repro.core.online import online_allocate, workload_stream
+
+N_TOTAL = 256      # BT(256) datacenter tree
+K = 16             # per-workload blue budget
+CAPACITY = 4       # each switch can serve 4 workloads
+N_WORKLOADS = 32
+
+t = bt(N_TOTAL, "linear")
+workloads = workload_stream(t, N_WORKLOADS, seed=0)
+
+print(f"BT({N_TOTAL}), linear rates, {N_WORKLOADS} workloads, "
+      f"k={K}, capacity={CAPACITY}\n")
+print(f"{'strategy':<10} {'norm. utilization':<18} {'switches exhausted'}")
+for strategy in ("soar", "top", "max", "level", "random"):
+    res = online_allocate(t, workloads, K, CAPACITY, strategy=strategy)
+    exhausted = int((res.residual_capacity == 0).sum())
+    print(f"{strategy:<10} {res.normalized[-1]:<18.4f} {exhausted}")
+
+print("\nCapacity pressure (SOAR): cumulative normalized utilization")
+res = online_allocate(t, workloads, K, CAPACITY, strategy="soar")
+for i in (0, 7, 15, 23, 31):
+    print(f"  after workload {i + 1:>2}: {res.normalized[i]:.4f}")
+print("\nAs capacity depletes, later workloads find fewer available"
+      "\nswitches and the ratio drifts towards all-red (= 1.0) — the"
+      "\npaper's Fig. 7 effect.")

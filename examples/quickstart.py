@@ -1,0 +1,40 @@
+"""Quickstart: the paper's core in one page.
+
+Builds the Fig. 2 example tree and a BT(256) datacenter tree, runs SOAR
+and every contending strategy, and prints the utilization table.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (STRATEGIES, all_blue, all_red, bt, phi, sample_load,
+                        soar, soar_fast)
+from repro.core.tree import DEST, Tree
+
+# --- 1. The paper's worked example (Fig. 2/3) ------------------------------
+parent = np.array([DEST, 0, 0, 1, 1, 2, 2])   # complete binary tree, 7 switches
+tree = Tree(parent, np.ones(7))               # unit link rates
+load = np.zeros(7, dtype=np.int64)
+load[[3, 4, 5, 6]] = [2, 6, 5, 4]             # rack sizes at the leaves
+
+print("Fig. 2 tree, k = 2 aggregation switches:")
+for name, fn in STRATEGIES.items():
+    cost = phi(tree, load, fn(tree, load, 2))
+    print(f"  {name:<12} phi = {cost:.0f}")
+res = soar(tree, load, 2)
+print(f"  {'SOAR':<12} phi = {res.cost:.0f}  (optimal; blue = "
+      f"{sorted(map(int, np.nonzero(res.blue)[0]))})")
+print(f"  {'all-red':<12} phi = {phi(tree, load, all_red(tree)):.0f}")
+print(f"  {'all-blue':<12} phi = {phi(tree, load, all_blue(tree)):.0f}\n")
+
+# --- 2. A datacenter-scale tree --------------------------------------------
+t = bt(256, "exponential")                    # BT(256), rates double per level
+L = sample_load(t, "power-law", seed=0)
+red = phi(t, L, all_red(t))
+print("BT(256), exponential link rates, power-law rack loads:")
+print(f"  all-red utilization : {red:.0f}")
+for k in (4, 16, 64):
+    r = soar_fast(t, L, k)
+    print(f"  SOAR k={k:<3}         : {r.cost:.0f}  "
+          f"({100 * (1 - r.cost / red):.0f}% saved, "
+          f"{int(r.blue.sum())} blue switches)")

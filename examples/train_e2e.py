@@ -1,0 +1,33 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model with
+SOAR-scheduled data-parallel gradient reduction, checkpointing, and the
+synthetic Zipf data pipeline.
+
+Run (full, a few hundred steps — takes a while on CPU):
+  PYTHONPATH=src python examples/train_e2e.py
+
+Quick smoke:
+  PYTHONPATH=src python examples/train_e2e.py --steps 10 --log-every 2
+
+Multi-device SOAR reduction (8 simulated devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/train_e2e.py --steps 30
+"""
+import sys
+
+from repro.launch import train
+
+DEFAULTS = [
+    "--arch", "qwen3-32b",
+    "--preset-100m",
+    "--global-batch", "8",
+    "--seq", "256",
+    "--k", "2",
+    "--ckpt-dir", "/tmp/repro_e2e_ckpt",
+    "--ckpt-every", "50",
+]
+
+if __name__ == "__main__":
+    extra = sys.argv[1:]
+    if not any(a == "--steps" for a in extra):
+        extra += ["--steps", "300"]
+    train.main(DEFAULTS + extra)

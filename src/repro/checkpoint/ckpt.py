@@ -1,0 +1,145 @@
+"""Sharded checkpointing with atomic commits and elastic restore.
+
+Layout per step:  <dir>/step_<n>/
+    manifest.json        tree structure + shapes/dtypes + step metadata
+    arrays.npz           flattened leaves keyed by tree path
+
+Writes go to a temp directory and are renamed into place (atomic on POSIX),
+so a crash mid-save never corrupts the latest checkpoint — the restart path
+simply loads the newest complete manifest. Restore is *elastic*: arrays are
+saved unsharded and re-device_put under the (possibly different) target
+sharding, so a job can resume on a different mesh size.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save(directory: str | os.PathLike, step: int, tree: Any,
+         extra: dict | None = None) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_"))
+    try:
+        flat = _flatten(tree)
+        np.savez(tmp / "arrays.npz", **flat)
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "treedef": str(treedef),
+            "extra": extra or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.glob("step_*"):
+        if (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str | os.PathLike, like: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Load into the structure of `like`; re-shard onto `shardings` if given."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = directory / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    shard_leaves = (jax.tree_util.tree_leaves(shardings, is_leaf=lambda x: x
+                    is None or hasattr(x, "spec")) if shardings is not None
+                    else [None] * len(leaves_like))
+    for (pathk, leaf), shard in zip(leaves_like, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        if key + "::bf16" in data:
+            arr = data[key + "::bf16"].view(jnp.bfloat16)
+        else:
+            arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {leaf.shape}")
+        out_leaves.append(jax.device_put(arr, shard) if shard is not None
+                          else jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out_leaves)
+    return tree, step
+
+
+class CheckpointManager:
+    """keep_n retention + optional async (background-thread) saves."""
+
+    def __init__(self, directory: str | os.PathLike, keep_n: int = 3,
+                 async_save: bool = True):
+        self.directory = pathlib.Path(directory)
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device
+
+        def work():
+            save(self.directory, step, host_tree, extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.directory.glob("step_*")
+            if (p / "manifest.json").exists())
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)

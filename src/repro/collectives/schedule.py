@@ -1,0 +1,132 @@
+"""SOAR placement -> static reduction program (the collective schedule).
+
+Builds, for a cluster tree + blue placement, the exact message-passing
+program a shard_map executor runs: which device sends which buffer slots to
+whom in each round, and where partial sums are materialized. All counts are
+static (topology, loads and coloring are known), so the program is a plain
+Python object baked into the jitted collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.reduce import messages_up, phi
+from ..core.soar_fast import soar_fast
+from ..core import baselines
+from ..core.tree import DEST, Tree
+from .topology import ClusterTopology
+
+
+@dataclasses.dataclass
+class PermuteRound:
+    perm: list                      # [(src_dev, dst_dev)]
+    slab: int                       # slots sent per pair
+    recv_offset: np.ndarray         # (n_dev,) slot offset at receiver
+    recv_count: np.ndarray          # (n_dev,) valid incoming slots
+
+
+@dataclasses.dataclass
+class CompressOp:
+    flag: np.ndarray                # (n_dev,) bool: device compresses now
+    width: np.ndarray               # (n_dev,) slots to sum into slot 0
+
+
+@dataclasses.dataclass
+class ReduceProgram:
+    n_dev: int
+    n_slots: int
+    ops: list                       # PermuteRound | CompressOp
+    root_home: int
+    root_count: int
+    utilization: float              # phi of the underlying placement
+    total_network_messages: int     # logical messages (== sum msgs_up)
+
+
+def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
+    t = topo.tree
+    load = topo.load
+    if any(load[v] > 0 and len(t.children[v]) > 0 for v in range(t.n)):
+        raise ValueError("executor supports leaf-only loads")
+    n_dev = topo.n_devices
+    msgs = messages_up(t, load, blue)
+
+    # homes: leaf -> its device; internal -> home of first nonempty child
+    home = np.full(t.n, -1, np.int64)
+    for dev, leaf in enumerate(topo.device_leaf):
+        if leaf >= 0:
+            home[leaf] = dev
+    for v in t.topo[::-1]:
+        if home[v] < 0:
+            for c in t.children[v]:
+                if home[c] >= 0:
+                    home[v] = home[c]
+                    break
+    # out-counts after aggregation decisions
+    out = msgs  # msgs_up already encodes red forward / blue collapse
+
+    ops: list = []
+    n_slots = 1
+    # process internal switches level by level (deepest parents first)
+    order = [v for v in t.topo[::-1] if t.children[v]]
+    level_of = {v: int(t.depth[v]) for v in range(t.n)}
+    for depth in sorted({level_of[v] for v in order}, reverse=True):
+        parents = [v for v in order if level_of[v] == depth]
+        maxc = max(len(t.children[v]) for v in parents)
+        for ci in range(1, maxc):   # child 0 lives at the parent's home
+            perm, roff, rcnt = [], np.zeros(n_dev, np.int64), np.zeros(n_dev, np.int64)
+            slab = 0
+            for p in parents:
+                kids = [c for c in t.children[p] if home[c] >= 0]
+                if ci >= len(kids):
+                    continue
+                c = kids[ci]
+                cnt = int(out[c])
+                if cnt == 0 or home[c] == home[p]:
+                    continue
+                off = int(load[p]) + sum(int(out[kids[j]]) for j in range(ci))
+                perm.append((int(home[c]), int(home[p])))
+                roff[home[p]] = off
+                rcnt[home[p]] = cnt
+                slab = max(slab, cnt)
+                n_slots = max(n_slots, off + cnt)
+            if perm:
+                ops.append(PermuteRound(perm, slab, roff, rcnt))
+        # compress at blue parents of this level
+        flag = np.zeros(n_dev, bool)
+        width = np.ones(n_dev, np.int64)
+        any_comp = False
+        for p in parents:
+            if blue[p] and home[p] >= 0:
+                kids = [c for c in t.children[p] if home[c] >= 0]
+                total = int(load[p]) + sum(int(out[c]) for c in kids)
+                if total > 1:
+                    flag[home[p]] = True
+                    width[home[p]] = total
+                    n_slots = max(n_slots, total)
+                    any_comp = True
+        if any_comp:
+            ops.append(CompressOp(flag, width))
+
+    r = t.root
+    return ReduceProgram(
+        n_dev=n_dev,
+        n_slots=n_slots,
+        ops=ops,
+        root_home=int(home[r]),
+        root_count=int(out[r]),
+        utilization=phi(t, load, blue),
+        total_network_messages=int(msgs.sum()),
+    )
+
+
+def plan(topo: ClusterTopology, k: int, avail: np.ndarray | None = None,
+         strategy: str = "soar"):
+    """Choose the blue set for a budget k and build the program."""
+    if strategy == "soar":
+        blue = soar_fast(topo.tree, topo.load, k, avail=avail).blue
+    else:
+        blue = baselines.STRATEGIES[strategy](
+            topo.tree, topo.load, k, avail=avail)
+    return blue, build_program(topo, blue)

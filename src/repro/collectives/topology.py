@@ -1,0 +1,102 @@
+"""Cluster reduction-tree topology: the paper's T overlaid on a TPU fleet.
+
+Gradient reduction for one model-parallel column flows over the (pod, data)
+mesh axes. Physically that is a tree: chips -> rack/host reducers -> pod
+spines -> the cross-pod destination d. Link rates are heterogeneous (ICI >>
+DCN), which is exactly the paper's arbitrary-omega setting; the bounded
+budget k models how many rack/pod reduction points a tenant may claim
+(Sec. 5.2 multi-workload capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.tree import DEST, Tree
+
+# Relative per-message transmission times (rho = 1/rate): a message crossing
+# a DCN hop costs ~16x an ICI hop (50 GB/s/link ICI vs ~3 GB/s/link-share DCN).
+RHO_ICI = 1.0
+RHO_RACK = 2.0
+RHO_DCN = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTopology:
+    tree: Tree
+    device_leaf: np.ndarray        # device id -> leaf switch id
+    load: np.ndarray               # per-switch load (grad shards entering)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.device_leaf)
+
+
+def fleet_tree(n_pods: int = 2, racks_per_pod: int = 4,
+               chips_per_rack: int = 4) -> ClusterTopology:
+    """Reduction tree: root spine -> pods -> racks; chips attach to racks.
+
+    Chips are *servers* in the paper's model (they produce the messages);
+    racks/pods/spine are the switches, some of which may aggregate.
+    """
+    parent, rho = [], []
+    root = 0
+    parent.append(DEST)
+    rho.append(RHO_DCN)            # spine -> destination (cross-cluster)
+    pods = []
+    for p in range(n_pods):
+        pods.append(len(parent))
+        parent.append(root)
+        rho.append(RHO_DCN)        # pod -> spine crosses the DCN
+    racks = []
+    for p in pods:
+        for r in range(racks_per_pod):
+            racks.append(len(parent))
+            parent.append(p)
+            rho.append(RHO_RACK)   # rack -> pod aggregation link
+    t = Tree(np.asarray(parent, np.int32), np.asarray(rho))
+    load = np.zeros(t.n, np.int64)
+    device_leaf = []
+    for r in racks:
+        for c in range(chips_per_rack):
+            device_leaf.append(r)
+            load[r] += 1           # each chip contributes one gradient shard
+    return ClusterTopology(tree=t, device_leaf=np.asarray(device_leaf),
+                           load=load)
+
+
+def chip_level_tree(n_pods: int = 2, racks_per_pod: int = 4,
+                    chips_per_rack: int = 4) -> ClusterTopology:
+    """Variant where each chip is its own leaf switch (ToR-of-one); used by
+    the shard_map executor, whose message homes live on devices."""
+    base = fleet_tree(n_pods, racks_per_pod, chips_per_rack)
+    parent = list(base.tree.parent)
+    rho = list(base.tree.rho)
+    load = list(base.load)
+    device_leaf = []
+    for dev, rack in enumerate(base.device_leaf):
+        leaf = len(parent)
+        parent.append(int(rack))
+        rho.append(RHO_ICI)        # chip -> rack ICI link
+        load[int(rack)] = 0
+        load.append(1)
+        device_leaf.append(leaf)
+    t = Tree(np.asarray(parent, np.int32), np.asarray(rho))
+    return ClusterTopology(tree=t, device_leaf=np.asarray(device_leaf),
+                           load=np.asarray(load, np.int64))
+
+
+def fail_devices(topo: ClusterTopology, dead: list[int]) -> ClusterTopology:
+    """Remove failed chips from the reduction tree (runtime FT path).
+
+    Dead chips stop producing messages; switches whose whole subtree died
+    still exist but carry zero load (SOAR then never wastes budget there —
+    the zero-load refinement of DESIGN.md §8).
+    """
+    load = topo.load.copy()
+    device_leaf = topo.device_leaf.copy()
+    for d in dead:
+        load[device_leaf[d]] -= 1
+        device_leaf[d] = -1
+    return ClusterTopology(tree=topo.tree, device_leaf=device_leaf, load=load)

@@ -1,0 +1,78 @@
+"""Reduce-operation simulator (paper Algorithm 1) and utilization cost phi.
+
+Message semantics:
+  * a red (non-aggregating) switch forwards every message arriving from its
+    children plus L(v) messages of its own servers;
+  * a blue (aggregating) switch collapses everything into a single outgoing
+    message — but only if its subtree holds any load at all ("the operation
+    ends when the destination receives the information from all nodes that
+    have strictly positive load"): a zero-load subtree sends nothing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .tree import DEST, Tree
+
+
+def messages_up(t: Tree, load: np.ndarray, blue: np.ndarray) -> np.ndarray:
+    """msg_e for the upward edge of every switch v (e = (v, p(v)))."""
+    load = np.asarray(load, dtype=np.int64)
+    blue = np.asarray(blue, dtype=bool)
+    sub_load = t.subtree_loads(load)
+    msgs = np.zeros(t.n, dtype=np.int64)
+    for v in t.topo[::-1]:  # leaves first
+        if blue[v]:
+            msgs[v] = 1 if sub_load[v] > 0 else 0
+        else:
+            acc = int(load[v])
+            for c in t.children[v]:
+                acc += int(msgs[c])
+            msgs[v] = acc
+    return msgs
+
+
+def phi(t: Tree, load: np.ndarray, blue: np.ndarray) -> float:
+    """Utilization complexity phi(T, L, U) = sum_e msg_e * rho(e) (Eq. 1)."""
+    return float((messages_up(t, load, blue) * t.rho).sum())
+
+
+def phi_barrier(t: Tree, load: np.ndarray, blue: np.ndarray) -> float:
+    """Alternative characterization via closest blue ancestors (Lemma 4.2).
+
+    phi = sum_{v in U} send(v) * rho(v, p*_v) + sum_{v not in U} L(v) * rho(v, p*_v)
+
+    (send(v) = 1 iff subtree load > 0; equals the paper's ``1`` whenever all
+    loads are positive). Used as a cross-check oracle in tests.
+    """
+    load = np.asarray(load, dtype=np.int64)
+    blue = np.asarray(blue, dtype=bool)
+    sub_load = t.subtree_loads(load)
+    total = 0.0
+    for v in range(t.n):
+        # distance/time to closest blue ancestor or d
+        u = int(t.parent[v])
+        acc = float(t.rho[v])
+        while u != DEST and not blue[u]:
+            acc += float(t.rho[u])
+            u = int(t.parent[u])
+        if blue[v]:
+            total += (1 if sub_load[v] > 0 else 0) * acc
+        else:
+            total += int(load[v]) * acc
+    return total
+
+
+def all_red(t: Tree) -> np.ndarray:
+    return np.zeros(t.n, dtype=bool)
+
+
+def all_blue(t: Tree) -> np.ndarray:
+    return np.ones(t.n, dtype=bool)
+
+
+def mask_from_set(t: Tree, U) -> np.ndarray:
+    m = np.zeros(t.n, dtype=bool)
+    for v in U:
+        m[int(v)] = True
+    return m

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+This is the model-zoo compute hot-spot for the prefill cells: the pure-jnp
+path materializes the (T, T) logits in HBM; this kernel keeps per-block
+running max / normalizer in VMEM so only q/k/v/o ever touch HBM.
+
+Layout: q (BH, T, D), k/v (BH, S, D) with heads folded into the batch dim
+(GQA grouping is the caller's reshape). Grid is (BH, T/block_q); each step
+loops over S/block_k key tiles with the standard m/l rescaling recurrence.
+K/V tiles are sliced from VMEM-resident per-BH panels (adequate up to ~8k
+context; longer contexts stream via the ops.py chunking wrapper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float,
+                  causal: bool):
+    q = q_ref[...][0]                    # (block_q, D)
+    k_all = k_ref[...][0]                # (S, D)
+    v_all = v_ref[...][0]                # (S, D)
+    bq, d = q.shape
+    s = k_all.shape[0]
+    q_idx = pl.program_id(1)
+
+    nblocks = pl.cdiv(s, block_k)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_all, (kb * block_k, 0), (block_k, d))
+        v = jax.lax.dynamic_slice(v_all, (kb * block_k, 0), (block_k, d))
+        logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+        if causal:
+            qpos = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (BH, T, D); k, v: (BH, S, D) -> (BH, T, D)."""
+    bh, t, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, pl.cdiv(t, block_q))
+    kernel = functools.partial(_flash_kernel, block_k=block_k, scale=scale,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""Jitted wrapper: head folding, padding, ref fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "interpret", "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = True,
+                    use_pallas: bool = True):
+    """(BH, T, D) attention; set use_pallas=False for the jnp oracle path."""
+    if q.ndim != 3 or k.shape != v.shape:
+        raise ValueError(f"bad shapes {q.shape} {k.shape} {v.shape}")
+    if not use_pallas:
+        return flash_attention_ref(q, k, v, causal)
+    bh, t, d = q.shape
+    s = k.shape[1]
+    bq = min(128, t)
+    bk = min(128, s)
+    # pad T/S to block multiples (extra keys masked out by causal/-inf logic
+    # only when causal; for bidirectional we mask via ref fallback)
+    tp = ((t + bq - 1) // bq) * bq
+    sp = ((s + bk - 1) // bk) * bk
+    if (tp != t or sp != s) and not causal:
+        return flash_attention_ref(q, k, v, causal)
+    qp = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0)))
+    if sp != s:  # keep padded keys out of the softmax
+        kp = kp.at[:, s:, :].set(0.0)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=interpret)
+    return out[:, :t, :]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: masked softmax attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (BH, T, D); k, v: (BH, S, D) -> (BH, T, D)."""
+    bh, t, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("btd,bsd->bts", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(t)[:, None]
+        logits = jnp.where(mask[None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bts,bsd->btd", w.astype(v.dtype), v)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: batched min-plus (tropical) convolution.
+
+SOAR-Gather's mCost inner loop (paper Alg. 3 lines 30-34) is, for every
+(node, ell) pair, the min-plus convolution of two monotone budget vectors:
+
+    C[b, i] = min_{0 <= j <= i}  A[b, i-j] + B[b, j]
+
+The level-synchronous gather batches all (node, ell) rows of a tree level;
+this kernel tiles the batch into VMEM blocks and runs the j-shift reduction
+on the VPU. Budget width K is padded to the 128-lane boundary by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]                       # (TB, K)
+    b = b_ref[...]                       # (TB, K)
+    tb, k = a.shape
+    inf = float("inf")
+    pad = jnp.full((tb, k), inf, a.dtype)
+    a_pad = jnp.concatenate([pad, a], axis=1)      # (TB, 2K)
+
+    def body(j, acc):
+        seg = jax.lax.dynamic_slice(a_pad, (0, k - j), (tb, k))
+        bj = jax.lax.dynamic_slice(b, (0, j), (tb, 1))
+        return jnp.minimum(acc, seg + bj)
+
+    o_ref[...] = jax.lax.fori_loop(0, k, body,
+                                   jnp.full((tb, k), inf, a.dtype))
+
+
+def minplus_pallas(a: jax.Array, b: jax.Array, block_rows: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """a, b: (rows, K) float32, K a multiple of 128 (pad in ops.py)."""
+    rows, k = a.shape
+    grid = (pl.cdiv(rows, block_rows),)
+    spec = pl.BlockSpec((block_rows, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, k), a.dtype),
+        interpret=interpret,
+    )(a, b)

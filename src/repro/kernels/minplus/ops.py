@@ -1,0 +1,36 @@
+"""Jitted wrapper: shape checks, lane padding, dtype handling."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .minplus import minplus_pallas
+from .ref import minplus_ref
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def minplus(a: jax.Array, b: jax.Array, interpret: bool = True,
+            use_pallas: bool = True) -> jax.Array:
+    """Batched tropical convolution with TPU lane padding.
+
+    a, b: (rows, K) -> (rows, K). interpret=True executes the Pallas kernel
+    body in Python (the CPU-container validation mode); on real TPUs pass
+    interpret=False.
+    """
+    if a.shape != b.shape or a.ndim != 2:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    if not use_pallas:
+        return minplus_ref(a, b)
+    rows, k = a.shape
+    kp = ((k + LANE - 1) // LANE) * LANE
+    dt = a.dtype
+    af = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, kp - k)),
+                 constant_values=jnp.inf)
+    bf = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, kp - k)),
+                 constant_values=jnp.inf)
+    out = minplus_pallas(af, bf, interpret=interpret)
+    return out[:, :k].astype(dt)

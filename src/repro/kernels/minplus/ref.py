@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the batched min-plus convolution."""
+import jax.numpy as jnp
+
+
+def minplus_ref(a, b):
+    """a, b: (rows, K) -> (rows, K); C[r,i] = min_{j<=i} a[r,i-j]+b[r,j]."""
+    rows, k = a.shape
+    i = jnp.arange(k)[:, None]          # output index
+    j = jnp.arange(k)[None, :]          # split index
+    gather = jnp.where(i - j >= 0, i - j, 0)
+    a_shift = a[:, gather]                          # (rows, K, K): a[i-j]
+    cand = a_shift + b[:, None, :]
+    cand = jnp.where((i - j >= 0)[None], cand, jnp.inf)
+    return cand.min(axis=-1)

@@ -1,0 +1,21 @@
+"""Jitted wrapper for the aggregation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import segment_reduce_ref
+from .segment_reduce import segment_reduce_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def segment_reduce(x: jax.Array, mask: jax.Array, interpret: bool = True,
+                   use_pallas: bool = True) -> jax.Array:
+    """Masked sum over the child axis: (G, C, D), (G, C) -> (G, D)."""
+    if x.ndim != 3 or mask.shape != x.shape[:2]:
+        raise ValueError(f"bad shapes {x.shape} {mask.shape}")
+    if not use_pallas:
+        return segment_reduce_ref(x, mask)
+    return segment_reduce_pallas(x, mask, interpret=interpret)

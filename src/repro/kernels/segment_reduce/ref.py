@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the masked group-sum."""
+import jax.numpy as jnp
+
+
+def segment_reduce_ref(x, mask):
+    """x: (G, C, D); mask: (G, C) -> (G, D)."""
+    return jnp.einsum("gcd,gc->gd", x, mask.astype(x.dtype))

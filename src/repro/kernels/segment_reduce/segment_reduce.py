@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: masked group-sum — the blue-switch aggregation.
+
+The Reduce primitive of the paper (Algorithm 1): an aggregating switch
+collapses up to C incoming child messages (gradient shards of width D) into
+one. Batched over G independent groups (one per aggregation point):
+
+    out[g, d] = sum_c mask[g, c] * x[g, c, d]
+
+Tiled (1 group, all C children, TD lanes) per grid step so the child stack
+streams through VMEM; the sum runs on the VPU at full lane width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(x_ref, m_ref, o_ref):
+    x = x_ref[...]                   # (1, C, TD)
+    m = m_ref[...]                   # (1, C, 1)
+    o_ref[...] = jnp.sum(x * m, axis=1)  # (1, TD)
+
+
+def segment_reduce_pallas(x: jax.Array, mask: jax.Array,
+                          block_d: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """x: (G, C, D) float; mask: (G, C) -> (G, D)."""
+    g, c, d = x.shape
+    m = mask.astype(x.dtype)[:, :, None]
+    grid = (g, pl.cdiv(d, block_d))
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, c, 1), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, d), x.dtype),
+        interpret=interpret,
+    )(x, m)

@@ -1,0 +1,3 @@
+from .ops import ssm_chunk_scan
+
+__all__ = ["ssm_chunk_scan"]

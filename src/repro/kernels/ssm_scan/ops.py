@@ -1,0 +1,26 @@
+"""Jitted wrapper for the chunked selective-SSM scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import ssm_chunk_scan_ref
+from .ssm_scan import ssm_chunk_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "use_pallas"))
+def ssm_chunk_scan(u, delta, bv, cv, a, s0, chunk: int = 256,
+                   interpret: bool = True, use_pallas: bool = True):
+    """Selective-SSM scan: returns (y, final_state). Shapes per ref.py."""
+    B, T, D = u.shape
+    N = bv.shape[-1]
+    if delta.shape != (B, T, 1) or cv.shape != (B, T, N):
+        raise ValueError(f"bad shapes delta={delta.shape} cv={cv.shape}")
+    if a.shape != (D, N) or s0.shape != (B, D, N):
+        raise ValueError(f"bad shapes a={a.shape} s0={s0.shape}")
+    if not use_pallas or T % chunk not in (0,):
+        return ssm_chunk_scan_ref(u, delta, bv, cv, a, s0)
+    return ssm_chunk_scan_pallas(u, delta, bv, cv, a, s0, chunk=chunk,
+                                 interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the chunked selective-SSM scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_chunk_scan_ref(u, delta, bv, cv, a, s0):
+    """Sequential reference: u (B,T,D), delta (B,T,1), bv/cv (B,T,N),
+    a (D,N), s0 (B,D,N) -> (y (B,T,D), s_final (B,D,N))."""
+
+    def step(s, inp):
+        u_t, d_t, b_t, c_t = inp                 # (B,D),(B,1),(B,N),(B,N)
+        decay = jnp.exp(d_t[..., None] * a[None])
+        s = s * decay + (d_t * u_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", s, c_t)
+        return s, y_t
+
+    xs = (u.swapaxes(0, 1), delta.swapaxes(0, 1), bv.swapaxes(0, 1),
+          cv.swapaxes(0, 1))
+    s_f, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_f

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: chunked selective-SSM scan (the §Perf hymba hot path).
+
+Computes the Mamba recurrence over one sequence chunk per grid step,
+carrying the (B_blk, D_blk, N) state across the chunk axis in a VMEM
+scratch ref (TPU grid steps run in order on a core, so the scratch is the
+cross-chunk carry — the same dataflow as models/ssm.py::mamba_forward's
+lax.scan, with the chunk body living entirely in VMEM):
+
+    s_t = s_{t-1} * exp(delta_t * A) + (delta_t * u_t) x B_t
+    y_t = <s_t, C_t>_N
+
+Grid: (batch blocks, channel blocks, chunks) — chunks innermost so the
+carry is correct; channels are independent (A is per-(d, n)), so D tiles
+freely. The sequential c-step loop runs on the VPU over (B_blk, D_blk, N)
+tiles; N (the state width, 16) rides the lane dimension with D_blk on the
+sublane axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, s0_ref,
+                     y_ref, sf_ref, s_scr):
+    j = pl.program_id(2)                       # chunk index (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = s0_ref[...]               # (B_blk, D_blk, N)
+
+    u = u_ref[...]                             # (B_blk, c, D_blk)
+    dt = dt_ref[...]                           # (B_blk, c, 1)
+    bv = b_ref[...]                            # (B_blk, c, N)
+    cv = c_ref[...]                            # (B_blk, c, N)
+    a = a_ref[...]                             # (1, D_blk, N)
+    s = s_scr[...]
+    cc = u.shape[1]
+
+    def step(t, carry):
+        s, y = carry
+        d_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 1)      # (B,1,1)
+        u_t = jax.lax.dynamic_slice_in_dim(u, t, 1, 1)[:, 0]  # (B,D)
+        b_t = jax.lax.dynamic_slice_in_dim(bv, t, 1, 1)[:, 0]  # (B,N)
+        c_t = jax.lax.dynamic_slice_in_dim(cv, t, 1, 1)[:, 0]  # (B,N)
+        decay = jnp.exp(d_t * a)                              # (B,D,N)
+        w = (d_t[:, 0] * u_t)[..., None] * b_t[:, None, :]    # (B,D,N)
+        s = s * decay + w
+        y_t = jnp.sum(s * c_t[:, None, :], axis=-1)           # (B,D)
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[:, None], t, 1)
+        return s, y
+
+    y0 = jnp.zeros(u.shape, u.dtype)
+    s, y = jax.lax.fori_loop(0, cc, step, (s, y0))
+    s_scr[...] = s
+    y_ref[...] = y
+    sf_ref[...] = s
+
+
+def ssm_chunk_scan_pallas(u, delta, bv, cv, a, s0, chunk: int = 256,
+                          block_b: int = 8, block_d: int = 256,
+                          interpret: bool = False):
+    """u: (B,T,D) f32; delta: (B,T,1); bv/cv: (B,T,N); a: (D,N); s0: (B,D,N).
+
+    Returns (y: (B,T,D), s_final: (B,D,N)).
+    """
+    B, T, D = u.shape
+    N = bv.shape[-1]
+    assert T % chunk == 0
+    nch = T // chunk
+    block_b = min(block_b, B)
+    block_d = min(block_d, D)
+    grid = (pl.cdiv(B, block_b), pl.cdiv(D, block_d), nch)
+    y, s_f = pl.pallas_call(
+        _ssm_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, chunk, block_d),
+                         lambda i, l, j: (i, j, l)),       # u
+            pl.BlockSpec((block_b, chunk, 1), lambda i, l, j: (i, j, 0)),
+            pl.BlockSpec((block_b, chunk, N), lambda i, l, j: (i, j, 0)),
+            pl.BlockSpec((block_b, chunk, N), lambda i, l, j: (i, j, 0)),
+            pl.BlockSpec((1, block_d, N), lambda i, l, j: (0, l, 0)),  # a
+            pl.BlockSpec((block_b, block_d, N), lambda i, l, j: (i, l, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, chunk, block_d),
+                         lambda i, l, j: (i, j, l)),       # y
+            pl.BlockSpec((block_b, block_d, N), lambda i, l, j: (i, l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), u.dtype),
+            jax.ShapeDtypeStruct((B, D, N), s0.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_b, block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, bv, cv, a[None], s0)
+    return y, s_f

@@ -1,0 +1,28 @@
+"""Jitted wrapper for top-k gradient compression."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import topk_compress_ref
+from .topk_compress import topk_compress_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "use_pallas"))
+def topk_compress(x: jax.Array, k: int, interpret: bool = True,
+                  use_pallas: bool = True):
+    """(R, D) -> (values (R, k), indices (R, k)) by descending magnitude."""
+    if x.ndim != 2 or not 0 < k <= x.shape[1]:
+        raise ValueError(f"bad input {x.shape}, k={k}")
+    if not use_pallas:
+        return topk_compress_ref(x, k)
+    return topk_compress_pallas(x, k, interpret=interpret)
+
+
+def decompress(values: jax.Array, indices: jax.Array, d: int) -> jax.Array:
+    """Scatter the kept entries back to dense (R, d)."""
+    r, k = values.shape
+    out = jnp.zeros((r, d), values.dtype)
+    return out.at[jnp.arange(r)[:, None], indices].set(values)

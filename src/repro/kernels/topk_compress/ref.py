@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: top-k by |x| per row, first-index tie-break."""
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress_ref(x, k: int):
+    """x: (R, D) -> (values (R, k), indices (R, k)), ordered by |x| desc."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    _, idx = jax.lax.top_k(mag, k)            # lower index wins ties
+    idx = idx.astype(jnp.int32)
+    vals = jnp.take_along_axis(x, idx, axis=1)
+    return vals, idx

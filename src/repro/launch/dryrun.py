@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent end-to-end —
+.lower().compile() fails on sharding mismatch / unsupported collective /
+compile-time OOM — and records memory_analysis / cost_analysis / parsed
+roofline terms into experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --force         # re-run cached
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.parallel.sharding import axis_rules
+from repro.launch import roofline, steps
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = pathlib.Path("experiments/dryrun")
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "serialized_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out and ma is not None:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def lower_cell(cfg: ModelConfig, shape: api.ShapeSpec, mesh,
+               seq_shard: bool = False, remat_policy: str | None = None,
+               moment_dtype: str | None = None):
+    """Returns (lowered, compiled, wall_times). Raises on any failure."""
+    mode = shape.kind
+    rules = steps.rules_for(mesh, shape, seq_shard=seq_shard)
+    if moment_dtype is None:
+        # trillion-scale cells use bf16 moments (see DESIGN.md memory notes)
+        moment_dtype = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    ocfg = adamw.AdamWConfig(moment_dtype=moment_dtype)
+    with mesh, axis_rules(rules, mesh):
+        if mode == "train":
+            params, opt = steps.abstract_state(cfg, ocfg)
+            batch = steps.abstract_batch(cfg, shape, "train")
+            pspec = steps.param_pspecs(params, rules)
+            ospec = steps.opt_pspecs(pspec)
+            bspec = steps.batch_pspecs(batch, mesh, shape)
+            fn = steps.make_train_step(cfg, ocfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(steps.named(mesh, pspec),
+                              steps.named(mesh, ospec),
+                              steps.named(mesh, bspec)),
+                out_shardings=(steps.named(mesh, pspec),
+                               steps.named(mesh, ospec), None),
+                donate_argnums=(0, 1),
+            )
+            t0 = time.time()
+            lowered = jitted.lower(params, opt, batch)
+        elif mode == "prefill":
+            params = steps.abstract_state(cfg)
+            batch = steps.abstract_batch(cfg, shape, "prefill")
+            pspec = steps.param_pspecs(params, rules)
+            bspec = steps.batch_pspecs(batch, mesh, shape)
+            fn = steps.make_prefill_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(steps.named(mesh, pspec),
+                                               steps.named(mesh, bspec)))
+            t0 = time.time()
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            params = steps.abstract_state(cfg)
+            caches = steps.abstract_caches(cfg, shape)
+            token = jax.ShapeDtypeStruct((shape.global_batch, 1), "int32")
+            pos = jax.ShapeDtypeStruct((), "int32")
+            pspec = steps.param_pspecs(params, rules)
+            cspec = steps.cache_pspecs(caches, mesh, shape)
+            fn = steps.make_serve_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(steps.named(mesh, pspec),
+                              steps.named(mesh, cspec),
+                              jax.sharding.NamedSharding(mesh, P()),
+                              jax.sharding.NamedSharding(mesh, P())),
+                out_shardings=(None, steps.named(mesh, cspec)),
+                donate_argnums=(1,),
+            )
+            t0 = time.time()
+            lowered = jitted.lower(params, caches, token, pos)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return lowered, compiled, {"lower_s": t_lower, "compile_s": t_compile}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             force: bool = False, **lower_kw) -> dict:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = OUT_DIR / f"{arch}__{shape_name}__{mesh_kind}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    cfg = ARCHS[arch]
+    shape = api.SHAPES[shape_name]
+    ok, reason = api.cell_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mode": shape.kind, "status": "skipped", "reason": reason,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    try:
+        lowered, compiled, times = lower_cell(cfg, shape, mesh, **lower_kw)
+        hlo = compiled.as_text()
+        stats = roofline.analyze_hlo(hlo)
+        terms = roofline.roofline_terms(stats, n_dev)
+        mf = roofline.model_flops(cfg, shape, shape.kind)
+        rec.update(
+            status="ok",
+            times=times,
+            n_devices=n_dev,
+            memory_analysis=_mem_analysis(compiled),
+            cost_analysis=_cost_analysis(compiled),
+            roofline=terms,
+            model_flops=mf,
+            useful_flops_ratio=(mf / terms["flops_global"]
+                                if terms["flops_global"] else 0.0),
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # failure IS the signal: record and re-raise later
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(api.SHAPES))
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(api.SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_kind, force=args.force,
+                               seq_shard=args.seq_shard)
+                dt = time.time() - t0
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" t>={r['step_time_lower_bound_s']:.3g}s"
+                             f" useful={rec['useful_flops_ratio']:.2f}")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                    failures.append((arch, shape, mesh_kind))
+                print(f"[{status:7s}] {arch:20s} {shape:12s} {mesh_kind:6s}"
+                      f" ({dt:6.1f}s){extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for unit tests (requires forced host device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    out = 1
+    for a in dp_axes(mesh):
+        out *= sizes[a]
+    return out

@@ -1,0 +1,141 @@
+"""Dry-run profiler: attribute roofline bytes/flops to individual HLO ops.
+
+The §Perf hillclimb loop reads this instead of a wall-clock trace: for a
+given (arch, shape, mesh) cell it prints the top-N ops by memory-traffic
+contribution, the collective inventory, and duplicate-op counts (a remat /
+redundant-collective smell test).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.profile_hlo --arch hymba-1.5b \
+      --shape train_4k --mesh single --top 25
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+from repro.launch import roofline
+
+
+def op_breakdown(hlo: str, top: int = 25):
+    comps = roofline.parse_computations(hlo)
+    mult = roofline.computation_multipliers(comps)
+    ckinds = roofline._callee_kinds(comps)
+    entry = comps.get("__entry__")
+    mem_by_kind = collections.Counter()
+    mem_rows = []      # (bytes, comp, opname, kind, type)
+    coll_rows = []
+    flop_rows = []
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0) or 1.0
+        kinds = ckinds.get(name, set())
+        is_entry = entry is not None and name == entry.name
+        top_level = is_entry or bool(kinds & {"body", "condition",
+                                              "branch_computations"})
+        defs = {}
+        parsed = []
+        for ln in comp.lines:
+            dm = roofline._DEF_RE.match(ln)
+            if dm:
+                defs[dm.group(1)] = dm.group(2)
+                parsed.append((dm.group(1), dm.group(2), dm.group(3), ln))
+        for out_name, out_type, kind, ln in parsed:
+            if kind == "dot":
+                km = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                ops = roofline._operands(ln)
+                if km and ops and ops[0] in defs:
+                    lhs_shapes = roofline._SHAPE_RE.findall(defs[ops[0]])
+                    if lhs_shapes:
+                        lhs = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+                        kk = 1
+                        for idx in km.group(1).split(","):
+                            if idx and int(idx) < len(lhs):
+                                kk *= lhs[int(idx)]
+                        f = 2.0 * sum(roofline._shape_numel(d) for _, d in
+                                      roofline._SHAPE_RE.findall(out_type)) * kk
+                        flop_rows.append((m * f, name, out_name, out_type))
+            base = kind.replace("-start", "")
+            if base in roofline.COLLECTIVES:
+                b = 0
+                for op in roofline._operands(ln):
+                    if op in defs:
+                        b += roofline._type_bytes(defs[op])
+                if b == 0:
+                    b = roofline._type_bytes(out_type)
+                coll_rows.append((m * b, name, out_name, base, out_type[:60]))
+            if top_level and kind not in roofline._SKIP_MEM:
+                reads, root_update = {}, None
+                if kind == "fusion":
+                    callee = next((r for k, r in roofline._called(ln)
+                                   if k == "calls"), None)
+                    if callee and callee in comps:
+                        reads, root_update = roofline._fusion_slice_bytes(
+                            comps[callee])
+                b = (roofline._type_bytes(out_type) if root_update is None
+                     else root_update)
+                for i, op in enumerate(roofline._operands(ln)):
+                    if i in reads:
+                        b += reads[i]
+                    elif op in defs:
+                        b += roofline._type_bytes(defs[op])
+                mem_rows.append((m * b, name, out_name, kind, out_type[:60]))
+                mem_by_kind[kind] += m * b
+    return mem_rows, coll_rows, flop_rows, mem_by_kind
+
+
+def report(hlo: str, top: int = 25) -> None:
+    mem_rows, coll_rows, flop_rows, mem_by_kind = op_breakdown(hlo, top)
+    tot_mem = sum(r[0] for r in mem_rows)
+    tot_coll = sum(r[0] for r in coll_rows)
+    tot_flop = sum(r[0] for r in flop_rows)
+    print(f"TOTAL mem={tot_mem/1e9:.2f} GB  coll={tot_coll/1e9:.3f} GB  "
+          f"flops={tot_flop/1e12:.3f} T (per device)")
+    print(f"\n-- memory by op kind --")
+    for kind, b in mem_by_kind.most_common(12):
+        print(f"  {kind:<22} {b/1e9:>10.2f} GB  ({100*b/max(tot_mem,1):.1f}%)")
+    print(f"\n-- top {top} memory ops --")
+    for b, comp, name, kind, t in sorted(mem_rows, reverse=True)[:top]:
+        print(f"  {b/1e9:>9.2f} GB  {kind:<18} {t:<40} [{comp[:40]}]")
+    print(f"\n-- collectives --")
+    agg = collections.Counter()
+    for b, comp, name, base, t in coll_rows:
+        agg[base] += b
+    for base, b in agg.most_common():
+        print(f"  {base:<20} {b/1e9:>10.3f} GB")
+    for b, comp, name, base, t in sorted(coll_rows, reverse=True)[:top]:
+        print(f"  {b/1e6:>9.1f} MB  {base:<18} {t:<40} [{comp[:40]}]")
+    print(f"\n-- top {min(top, 15)} dot ops --")
+    for f, comp, name, t in sorted(flop_rows, reverse=True)[:min(top, 15)]:
+        print(f"  {f/1e12:>9.3f} TF  {t:<44} [{comp[:40]}]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import api
+
+    cfg = ARCHS[args.arch]
+    shape = api.SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, compiled, times = lower_cell(cfg, shape, mesh,
+                                          seq_shard=args.seq_shard)
+    print(f"[{args.arch} x {args.shape} x {args.mesh}] "
+          f"lower={times['lower_s']:.1f}s compile={times['compile_s']:.1f}s")
+    report(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,364 @@
+"""Roofline-term extraction from compiled HLO (dry-run profiling).
+
+Why not just ``compiled.cost_analysis()``: our deep stacks lower through
+``lax.scan`` (compile-time sanity for 96-layer models), and XLA's
+HloCostAnalysis visits a while-loop body ONCE — under-counting FLOPs and
+collective bytes by the trip count. We therefore do call-graph-aware
+accounting over ``compiled.as_text()``:
+
+  * computations are parsed and linked (while body/cond, fusion calls, ...);
+  * each computation gets a multiplier = product of enclosing loop trip
+    counts (trip count recovered from the loop-condition constant);
+  * FLOPs  = sum over dot ops: 2 * numel(out) * contracted_size * multiplier;
+  * collective bytes = sum of operand bytes over all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (x multiplier);
+  * memory bytes = operand+output bytes of top-level (fusion-boundary) ops —
+    an HBM-traffic proxy that respects fusion.
+
+All numbers come from the SPMD-partitioned per-device module; multiply by
+device count for cluster totals (the roofline terms divide it back out).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation headers: "%name (args...) -> type {" / "ENTRY %name ... {"
+        if (stripped.endswith("{") and " -> " in stripped
+                and not stripped.startswith("ROOT")):
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(2), [])
+                comps[cur.name] = cur
+                if m.group(1):
+                    comps["__entry__"] = cur
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            cur.lines.append(stripped)
+    return comps
+
+
+def _called(line: str) -> list[tuple[str, str]]:
+    """(kind, computation) references on an op line."""
+    out = []
+    for kw in ("body", "condition", "to_apply", "calls", "branch_computations",
+               "called_computations"):
+        for m in re.finditer(kw + r"=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?",
+                             line):
+            for name in re.split(r",\s*", m.group(1)):
+                out.append((kw, name.lstrip("%")))
+    return out
+
+
+def _trip_count(comp: Computation) -> int:
+    """Loop condition: compare(iter, constant(N)) -> N (fallback 1)."""
+    consts = []
+    for ln in comp.lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = comps.get("__entry__")
+    mult = {c: 0.0 for c in comps if c != "__entry__"}
+    if entry is None:
+        for c in mult:
+            mult[c] = 1.0
+        return mult
+    mult[entry.name] = 1.0
+    # propagate in topological-ish order via repeated passes (call graph is a DAG)
+    for _ in range(len(comps)):
+        changed = False
+        for name, comp in comps.items():
+            if name == "__entry__" or mult.get(name, 0.0) == 0.0:
+                continue
+            m_here = mult[name]
+            for ln in comp.lines:
+                refs = _called(ln)
+                if not refs:
+                    continue
+                is_while = " while(" in ln or ln.startswith("while")
+                trip = 1
+                if is_while:
+                    cond_name = next((r[1] for r in refs if r[0] == "condition"),
+                                     None)
+                    if cond_name and cond_name in comps:
+                        trip = _trip_count(comps[cond_name])
+                for kind, ref in refs:
+                    if ref not in comps:
+                        continue
+                    factor = trip if (is_while and kind in ("body", "condition")) \
+                        else 1
+                    want = m_here * factor
+                    if want > mult.get(ref, 0.0):
+                        mult[ref] = want
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+                     r"(\([^={]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+                     r"([a-z][a-z0-9\-]*)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _operands(line: str) -> list[str]:
+    """Operand names inside the op's argument parens."""
+    m = re.search(r"\s[a-z][a-z0-9\-]*\((.*)$", line)
+    if not m:
+        return []
+    args = m.group(1)
+    # cut at "), " attribute boundary heuristically
+    depth, end = 1, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(args[:end])
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0                 # per-device
+    memory_bytes: float = 0.0          # per-device HBM-traffic proxy
+    collective_bytes: float = 0.0      # per-device, sum of operand bytes
+    collective_ops: dict = dataclasses.field(default_factory=dict)
+    dot_flops_unscaled: float = 0.0
+
+
+_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "copy-start", "copy-done", "after-all", "partition-id", "while",
+             "conditional", "call"}
+
+_PARAM_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+                       r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+parameter\((\d+)\)")
+
+
+def _fusion_slice_bytes(fused: Computation) -> tuple[dict, int | None]:
+    """Slice-aware byte accounting for a fusion body.
+
+    Returns (param_bytes, root_update_bytes):
+      * param_bytes[i] — HBM bytes actually read for parameter i. When a
+        parameter is consumed ONLY by dynamic-slice ops, the traffic is the
+        slice size (the while-loop scan pattern: the full (T, ...) buffer
+        stays resident; each iteration reads one window). Otherwise the
+        full parameter size.
+      * root_update_bytes — when the fusion ROOT is dynamic-update-slice,
+        the written bytes are the update operand's size (in-place
+        accumulator), not the whole buffer; None if the root is anything
+        else.
+    """
+    params: dict[str, tuple[int, str]] = {}   # name -> (index, type)
+    defs: dict[str, str] = {}
+    ops = []
+    root = None
+    for ln in fused.lines:
+        pm = _PARAM_RE.match(ln)
+        if pm:
+            params[pm.group(1)] = (int(pm.group(3)), pm.group(2))
+            defs[pm.group(1)] = pm.group(2)
+            continue
+        dm = _DEF_RE.match(ln)
+        if dm:
+            defs[dm.group(1)] = dm.group(2)
+            ops.append((dm.group(1), dm.group(2), dm.group(3), ln))
+            if ln.strip().startswith("ROOT"):
+                root = (dm.group(1), dm.group(2), dm.group(3), ln)
+    # consumers of each param
+    reads: dict[int, int] = {}
+    consumed_by: dict[str, list[tuple[str, str]]] = {p: [] for p in params}
+    for out_name, out_type, kind, ln in ops:
+        for op in _operands(ln):
+            if op in consumed_by:
+                consumed_by[op].append((kind, out_type))
+    for pname, (idx, ptype) in params.items():
+        uses = consumed_by[pname]
+        if uses and all(k == "dynamic-slice" for k, _ in uses):
+            reads[idx] = sum(_type_bytes(t) for _, t in uses)
+        else:
+            reads[idx] = _type_bytes(ptype)
+    root_update = None
+    if root is not None and root[2] == "dynamic-update-slice":
+        ops_in = _operands(root[3])
+        if len(ops_in) >= 2 and ops_in[1] in defs:
+            root_update = _type_bytes(defs[ops_in[1]])
+    return reads, root_update
+
+
+def _callee_kinds(comps) -> dict[str, set]:
+    kinds: dict[str, set] = {}
+    for comp in comps.values():
+        for ln in comp.lines:
+            for kind, ref in _called(ln):
+                kinds.setdefault(ref, set()).add(kind)
+    return kinds
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(comps)
+    ckinds = _callee_kinds(comps)
+    entry = comps.get("__entry__")
+    stats = HloStats()
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0) or 1.0
+        # fusion/reducer bodies are *inside* a kernel: not an HBM boundary.
+        kinds = ckinds.get(name, set())
+        is_entry = entry is not None and name == entry.name
+        top_level = is_entry or bool(kinds & {"body", "condition",
+                                              "branch_computations"})
+        # local def map: name -> (type_str, op_kind)
+        defs: dict[str, str] = {}
+        parsed = []
+        for ln in comp.lines:
+            dm = _DEF_RE.match(ln)
+            if dm:
+                defs[dm.group(1)] = dm.group(2)
+                parsed.append((dm.group(1), dm.group(2), dm.group(3), ln))
+        for out_name, out_type, kind, ln in parsed:
+            if kind == "dot":
+                km = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                ops = _operands(ln)
+                if km and ops and ops[0] in defs:
+                    lhs_shapes = _SHAPE_RE.findall(defs[ops[0]])
+                    if lhs_shapes:
+                        lhs = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+                        k = 1
+                        for idx in km.group(1).split(","):
+                            if idx and int(idx) < len(lhs):
+                                k *= lhs[int(idx)]
+                        f = 2.0 * sum(_shape_numel(d) for _, d in
+                                      _SHAPE_RE.findall(out_type)) * k
+                        stats.flops += m * f
+                        stats.dot_flops_unscaled += f
+            base = kind.replace("-start", "")
+            if base in COLLECTIVES:
+                b = 0
+                for op in _operands(ln):
+                    if op in defs:
+                        b += _type_bytes(defs[op])
+                if b == 0:  # fall back to output size (all-reduce: equal)
+                    b = _type_bytes(out_type)
+                stats.collective_bytes += m * b
+                stats.collective_ops[base] = stats.collective_ops.get(base, 0) + 1
+            if top_level and kind not in _SKIP_MEM:
+                reads, root_update = {}, None
+                if kind == "fusion":
+                    callee = next((r for k, r in _called(ln) if k == "calls"),
+                                  None)
+                    if callee and callee in comps:
+                        reads, root_update = _fusion_slice_bytes(comps[callee])
+                b = _type_bytes(out_type) if root_update is None else root_update
+                for i, op in enumerate(_operands(ln)):
+                    if i in reads:
+                        b += reads[i]
+                    elif op in defs:
+                        b += _type_bytes(defs[op])
+                stats.memory_bytes += m * b
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def roofline_terms(stats: HloStats, n_devices: int) -> dict:
+    """Seconds per step for each roof, from per-device stats."""
+    compute_s = stats.flops / PEAK_FLOPS
+    memory_s = stats.memory_bytes / HBM_BW
+    collective_s = stats.collective_bytes / ICI_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "flops_per_device": stats.flops,
+        "flops_global": stats.flops * n_devices,
+        "memory_bytes_per_device": stats.memory_bytes,
+        "collective_bytes_per_device": stats.collective_bytes,
+        "collective_ops": stats.collective_ops,
+    }
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", collective_s), key=lambda kv: kv[1])
+    terms["bottleneck"] = dom[0]
+    terms["step_time_lower_bound_s"] = dom[1]
+    return terms
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+    """MODEL_FLOPS: 6*N*D for train (3x fwd+bwd), 2*N*D forward-only.
+
+    N = active params, D = tokens processed.
+    """
+    n = cfg.active_param_count()
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

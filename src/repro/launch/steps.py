@@ -1,0 +1,152 @@
+"""Jittable train / prefill / serve steps + sharding-spec derivation.
+
+These are the functions the dry-run lowers and the drivers execute. All
+sharding is expressed as PartitionSpec pytrees derived here; the model code
+itself only carries logical-axis constraints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import api
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..parallel.sharding import AxisRules, make_rules, param_sharding_specs
+from .mesh import dp_axes, dp_size, mesh_axis_sizes
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig):
+    lfn = api.loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lfn, has_aux=True)(params, batch)
+        lr_scale = adamw.cosine_lr(opt_state["step"], 2000, 100_000)
+        new_params, new_opt, gnorm = adamw.update(
+            grads, opt_state, params, ocfg, lr_scale)
+        out = {"loss": loss, "grad_norm": gnorm}
+        out.update(metrics)
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    pfn = api.prefill_fn(cfg)
+
+    def prefill_step(params, batch):
+        logits, caches = pfn(params, batch)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    dfn = api.decode_fn(cfg)
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = dfn(params, caches, token, pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+def rules_for(mesh, shape: api.ShapeSpec | None = None,
+              seq_shard: bool = False) -> AxisRules:
+    multi = "pod" in mesh.axis_names
+    rules = make_rules(multi, seq_shard=seq_shard)
+    rules["kv_heads"] = None  # Hkv < TP width for most archs: replicate KV
+    if shape is not None and shape.global_batch < dp_size(mesh):
+        rules["batch"] = None           # e.g. long_500k: batch 1
+        rules["tokens_flat"] = ("model",)
+    return rules
+
+
+def batch_pspecs(batch: Any, mesh, shape: api.ShapeSpec) -> Any:
+    dp = dp_axes(mesh)
+    bsh = None if shape.global_batch % dp_size(mesh) else dp
+
+    def spec(leaf):
+        s = [None] * leaf.ndim
+        if leaf.ndim >= 1 and bsh:
+            s[0] = bsh
+        return P(*s)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(caches: Any, mesh, shape: api.ShapeSpec) -> Any:
+    """Shard caches: batch dim over DP when divisible; the largest remaining
+    dim (typically the seq_len axis — flash-decoding style) over 'model'."""
+    dp = dp_axes(mesh)
+    dpn = dp_size(mesh)
+    msize = mesh_axis_sizes(mesh)["model"]
+
+    def spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        stacked = any(n in ("layers", "dec") for n in names)
+        s: list = [None] * leaf.ndim
+        b_dim = 1 if (stacked and leaf.ndim >= 2) else 0
+        if leaf.ndim > b_dim and leaf.shape[b_dim] % dpn == 0:
+            s[b_dim] = dp
+        rest = [(leaf.shape[i], i) for i in range(leaf.ndim)
+                if i != b_dim and (not stacked or i > 0)]
+        for size, i in sorted(rest, reverse=True):
+            if size % msize == 0 and size >= msize:
+                s[i] = "model"
+                break
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def param_pspecs(params: Any, rules: AxisRules) -> Any:
+    return param_sharding_specs(
+        params, rules, stacked_prefixes=("layers", "enc_layers", "dec_layers"))
+
+
+def opt_pspecs(pspecs: Any) -> Any:
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Abstract (allocation-free) inputs for lowering
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg: ModelConfig, ocfg: adamw.AdamWConfig | None = None):
+    params = jax.eval_shape(api.init_fn(cfg), jax.random.PRNGKey(0))
+    if ocfg is None:
+        return params
+    opt = jax.eval_shape(functools.partial(adamw.init, cfg=ocfg), params)
+    return params, opt
+
+
+def abstract_batch(cfg: ModelConfig, shape: api.ShapeSpec, mode=None):
+    return jax.eval_shape(
+        functools.partial(api.input_specs, cfg, shape, mode))
+
+
+def abstract_caches(cfg: ModelConfig, shape: api.ShapeSpec):
+    return jax.eval_shape(
+        functools.partial(api.init_caches, cfg, shape.global_batch,
+                          shape.seq_len))

@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from . import api
+
+__all__ = ["ModelConfig", "api"]

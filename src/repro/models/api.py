@@ -1,0 +1,112 @@
+"""Family-dispatching model API + assigned input shapes.
+
+Entry points used by launchers, tests, and the dry-run:
+  init_fn(cfg)(key) -> params
+  loss_fn(cfg)(params, batch) -> (loss, metrics)
+  prefill_fn(cfg)(params, batch) -> (last_logits, caches)
+  decode_fn(cfg)(params, caches, token, pos) -> (logits, caches)
+  init_caches(cfg, batch, seq) -> zero caches
+  input_specs(cfg, shape, mode) -> batch pytree (zeros; use jax.eval_shape /
+      ShapeDtypeStruct conversion for allocation-free dry-runs)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import ModelConfig
+from .layers import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(supported, reason-if-not). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 524k dense KV excluded (DESIGN.md)"
+    return True, ""
+
+
+def _is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.is_encoder_decoder
+
+
+def init_fn(cfg: ModelConfig):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return functools.partial(mod.init_params, cfg)
+
+
+def loss_fn(cfg: ModelConfig):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return lambda params, batch: mod.loss_fn(params, batch, cfg)
+
+
+def prefill_fn(cfg: ModelConfig):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return lambda params, batch: mod.prefill(params, batch, cfg)
+
+
+def decode_fn(cfg: ModelConfig):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return lambda params, caches, token, pos: mod.decode_step(
+        params, caches, token, pos, cfg)
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int):
+    if _is_encdec(cfg):
+        return encdec.init_caches(cfg, batch, seq)
+    return transformer.init_caches(cfg, batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mode: str | None = None):
+    """Batch pytree of zeros for (cfg, shape); wrap in eval_shape for dry-run."""
+    mode = mode or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg)
+    if _is_encdec(cfg):
+        T = max(8, S // cfg.target_ratio) if mode == "train" else 8
+        T = min(T, encdec.WHISPER_MAX_TARGET)
+        batch = {"frames": jnp.zeros((B, S, cfg.d_model), dt)}
+        if mode == "train":
+            batch["tokens"] = jnp.zeros((B, T), jnp.int32)
+            batch["labels"] = jnp.zeros((B, T), jnp.int32)
+        else:
+            batch["tokens"] = jnp.zeros((B, T), jnp.int32)
+        return batch
+    if cfg.n_prefix_embeds and mode in ("train", "prefill"):
+        P = min(cfg.n_prefix_embeds, S // 2)
+        batch = {
+            "prefix_embeds": jnp.zeros((B, P, cfg.d_model), dt),
+            "tokens": jnp.zeros((B, S - P), jnp.int32),
+        }
+        if mode == "train":
+            batch["labels"] = jnp.zeros((B, S - P), jnp.int32)
+        return batch
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+    if mode == "train":
+        batch["labels"] = jnp.zeros((B, S), jnp.int32)
+    return batch
+
+
+def abstract(tree):
+    """Pytree -> ShapeDtypeStruct stand-ins (no allocation)."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)

@@ -1,0 +1,323 @@
+"""Attention variants: GQA (opt. qk-norm / sliding window) and MLA.
+
+All functions are pure; KV caches are explicit pytrees. Shapes:
+  x:      (B, T, d)
+  cache:  gqa: {"k","v": (B, S, Hkv, hd)};  mla: {"ckv": (B, S, r), "kr": (B, S, rr)}
+Decode steps take the current position ``pos`` (int32 scalar) and write into
+the fixed-size cache with dynamic_update_slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import cs
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, dtype_of, rms_head_norm, rope_tables
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# shared: masked softmax attention core (pure jnp; Pallas kernel is the TPU path)
+# ---------------------------------------------------------------------------
+
+def sdpa(q, k, v, mask, scale):
+    """q: (B,T,H,Dq) k: (B,S,Hkv,Dq) v: (B,S,Hkv,Dv); GQA by head grouping."""
+    B, T, H, Dq = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, Dq)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", w, v)
+    return out.reshape(B, T, H, -1)
+
+
+def causal_mask(T: int, S: int, window: int = 0, offset: int = 0):
+    """(T, S) boolean mask; q position i attends to keys <= i (+window)."""
+    qpos = jnp.arange(T)[:, None] + offset
+    kpos = jnp.arange(S)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+# Blocked attention activates for sequences at least this long (and the
+# block size). 2048 divides every assigned shape (4k/32k/512k).
+SDPA_BLOCK = 2048
+
+
+def sdpa_blocked(q, k, v, scale, causal=True, window=0, block=SDPA_BLOCK):
+    """Online-softmax blocked attention (flash-attention dataflow in jnp).
+
+    Never materializes the (T, S) score matrix: a static double loop over
+    (query block, key block) tiles keeps live intermediates at
+    (B, H, block, block), with causal / sliding-window tiles skipped at
+    trace time. This is the jnp analogue of kernels/flash_attention (the
+    Pallas TPU path); identical semantics to ``sdpa`` (tested).
+    """
+    B, T, H, Dq = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    assert T % block == 0 and S % block == 0
+    nq, nk = T // block, S // block
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * block:(i + 1) * block].reshape(B, block, Hkv, G, Dq)
+        q_lo = i * block
+        # key-block range needed by this query block (static skipping)
+        # causal skipping assumes q/k positions aligned, which holds only
+        # for the square self-attention case (T == S)
+        j_hi = i + 1 if (causal and T == S) else nk
+        j_lo = 0
+        if window and causal and T == S:
+            j_lo = max(0, (q_lo - window) // block)
+        m = jnp.full((B, Hkv, G, block), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, block), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, block, Dv), jnp.float32)
+        for j in range(j_lo, j_hi):
+            kj = k[:, j * block:(j + 1) * block]
+            vj = v[:, j * block:(j + 1) * block]
+            s = jnp.einsum("bthgd,bshd->bhgts", qi, kj).astype(
+                jnp.float32) * scale
+            if causal and T == S:
+                if window:                          # every tile in the band
+                    msk = causal_mask(block, block, window,
+                                      offset=(i - j) * block)
+                    s = jnp.where(msk[None, None, None], s, NEG_INF)
+                elif i == j:                        # diagonal tile
+                    msk = causal_mask(block, block)
+                    s = jnp.where(msk[None, None, None], s, NEG_INF)
+                # fully-inside tiles need no mask
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l = l * alpha + pexp.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgts,bshd->bhgtd", pexp.astype(vj.dtype), vj)
+            m = m_new
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(B, block, H, Dv))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _pick_block(T: int, S: int, window: int = 0) -> int | None:
+    """Tile size for blocked attention, or None to use plain sdpa.
+
+    Sliding-window layers tile at the window size (the band then spans
+    exactly two tiles per query block instead of mostly-masked big tiles).
+    """
+    block = min(SDPA_BLOCK, window) if window else SDPA_BLOCK
+    if T >= block >= 256 and T % block == 0 and S % block == 0:
+        return block
+    return None
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "w_q": dense_init(ks[0], (d, H * hd), dt),
+        "w_k": dense_init(ks[1], (d, Hkv * hd), dt),
+        "w_v": dense_init(ks[2], (d, Hkv * hd), dt),
+        "w_o": dense_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    B, T, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["w_q"]).reshape(B, T, H, hd)
+    k = (x @ p["w_k"]).reshape(B, T, Hkv, hd)
+    v = (x @ p["w_v"]).reshape(B, T, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)  # (T, hd/2)
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, causal: bool = True, window: int = 0):
+    """Full-sequence attention (train / prefill). Returns (out, {"k","v"})."""
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    q, k, v = _qkv(p, x, cfg, positions)
+    q = cs(q, "batch", "seq", "heads", None)
+    k = cs(k, "batch", "seq", "kv_heads", None)
+    v = cs(v, "batch", "seq", "kv_heads", None)
+    scale = 1.0 / jnp.sqrt(cfg.hd).astype(jnp.float32)
+    block = _pick_block(T, T, window)
+    if block:
+        out = sdpa_blocked(q, k, v, scale, causal=causal, window=window,
+                           block=block)
+    else:
+        if causal:
+            mask = causal_mask(T, T, window)[None]
+        else:
+            mask = jnp.ones((1, T, T), bool)
+        out = sdpa(q, k, v, mask, scale)
+    out = out.reshape(B, T, -1) @ p["w_o"]
+    return cs(out, "batch", "seq", "embed"), {"k": k, "v": v}
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
+    """Single-token decode. x: (B, 1, d); cache k/v: (B, S, Hkv, hd)."""
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    q, k, v = _qkv(p, x, cfg, jnp.full((1,), pos))
+    if window and window < S + 1:
+        # ring buffer: once pos >= window every slot holds one of the last
+        # `window` tokens (each rope'd at its absolute position on write).
+        slot = jnp.mod(pos, cache["k"].shape[1])
+        k_all = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        mask = (jnp.arange(k_all.shape[1]) <= pos)[None, None, :]
+    else:
+        k_all = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        mask = (jnp.arange(k_all.shape[1]) <= pos)[None, None, :]
+    out = sdpa(q, k_all, v_all, mask,
+               1.0 / jnp.sqrt(cfg.hd).astype(jnp.float32))
+    out = out.reshape(B, 1, -1) @ p["w_o"]
+    return out, {"k": k_all, "v": v_all}
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, seq: int, window: int = 0):
+    S = min(seq, window) if window else seq
+    shape = (batch, S, cfg.n_kv_heads, cfg.hd)
+    z = jnp.zeros  # used under eval_shape for dry-run
+    return {"k": z(shape, dtype_of(cfg)), "v": z(shape, dtype_of(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3): latent-compressed KV
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    nd, rd, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    p = {}
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[0], (d, cfg.q_lora_rank), dt)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), dt)
+        p["w_uq"] = dense_init(ks[1], (cfg.q_lora_rank, H * (nd + rd)), dt)
+    else:
+        p["w_q"] = dense_init(ks[1], (d, H * (nd + rd)), dt)
+    p["w_dkv"] = dense_init(ks[2], (d, r + rd), dt)  # latent + shared k_rope
+    p["kv_norm"] = jnp.ones((r,), dt)
+    p["w_ukv"] = dense_init(ks[3], (r, H * (nd + vd)), dt)
+    p["w_o"] = dense_init(ks[4], (H * vd, d), dt)
+    return p
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    B, T, _ = x.shape
+    H, nd, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        ql = rms_head_norm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
+        q = (ql @ p["w_uq"]).reshape(B, T, H, nd + rd)
+    else:
+        q = (x @ p["w_q"]).reshape(B, T, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_tables(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[None, :, None, :], sin[None, :, None, :])
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg: ModelConfig, positions):
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv_kr = x @ p["w_dkv"]
+    ckv = rms_head_norm(p["kv_norm"], ckv_kr[..., :r], cfg.norm_eps)
+    cos, sin = rope_tables(positions, rd, cfg.rope_theta)
+    kr = apply_rope(ckv_kr[..., r:], cos[None], sin[None])  # shared head
+    return ckv, kr
+
+
+def mla_forward(p, x, cfg: ModelConfig, causal: bool = True):
+    """Materialized-KV full-sequence MLA. Returns (out, {"ckv","kr"})."""
+    B, T, _ = x.shape
+    H, nd, rd, vd, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    positions = jnp.arange(T)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, kr = _mla_latent(p, x, cfg, positions)
+    kv = (ckv @ p["w_ukv"]).reshape(B, T, H, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    scale = 1.0 / jnp.sqrt(nd + rd).astype(jnp.float32)
+    if _pick_block(T, T):
+        # fold the shared rope head into per-head keys: the two-einsum sum
+        # equals one dot over the concatenated (nope | rope) feature dim
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, T, H, rd))], -1)
+        out = sdpa_blocked(q_full, k_full, v, scale, causal=causal)
+        out = out.reshape(B, T, H * vd)
+    else:
+        mask = causal_mask(T, T) if causal else jnp.ones((T, T), bool)
+        logits = (jnp.einsum("bthd,bshd->bhts", q_nope, k_nope) +
+                  jnp.einsum("bthd,bsd->bhts", q_rope, kr)).astype(jnp.float32)
+        logits = jnp.where(mask[None, None], logits * scale, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhts,bshd->bthd", w, v).reshape(B, T, H * vd)
+    return cs(out @ p["w_o"], "batch", "seq", "embed"), {"ckv": ckv, "kr": kr}
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed (latent-space) single-token decode: O(S·r) per head pair."""
+    B = x.shape[0]
+    H, nd, rd, vd, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    positions = jnp.full((1,), pos)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)      # (B,1,H,nd),(B,1,H,rd)
+    ckv_t, kr_t = _mla_latent(p, x, cfg, positions)    # (B,1,r),(B,1,rd)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_t, (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_t, (0, pos, 0))
+    w_uk = p["w_ukv"].reshape(r, H, nd + vd)[..., :nd]   # (r, H, nd)
+    w_uv = p["w_ukv"].reshape(r, H, nd + vd)[..., nd:]   # (r, H, vd)
+    if cfg.decode_absorb:
+        # absorb W_uk into q: score space becomes the latent space
+        q_lat = jnp.einsum("bthd,rhd->bthr", q_nope, w_uk)      # (B,1,H,r)
+        logits = (jnp.einsum("bthr,bsr->bhts", q_lat, ckv) +
+                  jnp.einsum("bthd,bsd->bhts", q_rope, kr))
+    else:
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv, w_uk)
+        logits = (jnp.einsum("bthd,bshd->bhts", q_nope, k_nope) +
+                  jnp.einsum("bthd,bsd->bhts", q_rope, kr))
+    scale = 1.0 / jnp.sqrt(nd + rd).astype(jnp.float32)
+    mask = (jnp.arange(ckv.shape[1]) <= pos)[None, None, None, :]
+    logits = jnp.where(mask, logits.astype(jnp.float32) * scale, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    if cfg.decode_absorb:
+        ctx_lat = jnp.einsum("bhts,bsr->bthr", w, ckv)           # (B,1,H,r)
+        out = jnp.einsum("bthr,rhd->bthd", ctx_lat, w_uv)
+    else:
+        v = jnp.einsum("bsr,rhd->bshd", ckv, w_uv)
+        out = jnp.einsum("bhts,bshd->bthd", w, v)
+    out = out.reshape(B, 1, H * vd) @ p["w_o"]
+    return out, {"ckv": ckv, "kr": kr}
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    dt = dtype_of(cfg)
+    return {
+        "ckv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dt),
+        "kr": jnp.zeros((batch, seq, cfg.qk_rope_dim), dt),
+    }

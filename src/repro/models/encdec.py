@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The mel/conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_frames, d). Sinusoidal absolute positions
+(both sides — deviation from Whisper's learned decoder positions, noted in
+DESIGN.md), LayerNorm, GELU MLP, no rope. Decoder self-attention cache is
+sized WHISPER_MAX_TARGET; the cross-attention cache carries the (possibly
+very long) encoder output — that is what scales with the seq_len shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import cs
+from .attention import causal_mask, sdpa
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, dense_init, dtype_of, embed_init, \
+    init_mlp, init_norm
+
+WHISPER_MAX_TARGET = 448
+
+
+def sinusoid(T: int, d: int, dtype):
+    pos = np.arange(T)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * dim / d)
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, dtype)
+
+
+def _init_xattn(key, cfg: ModelConfig):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "w_q": dense_init(ks[0], (d, H * hd), dt),
+        "w_k": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dt),
+        "w_v": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dt),
+        "w_o": dense_init(ks[3], (H * hd, d), dt),
+    }
+
+
+def _attend(p, xq, k, v, cfg: ModelConfig, mask):
+    B, T, _ = xq.shape
+    q = (xq @ p["w_q"]).reshape(B, T, cfg.n_heads, cfg.hd)
+    out = sdpa(q, k, v, mask, 1.0 / np.sqrt(cfg.hd))
+    return out.reshape(B, T, -1) @ p["w_o"]
+
+
+def _kv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    k = (x @ p["w_k"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["w_v"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg), "attn": _init_xattn(k1, cfg),
+            "ln2": init_norm(cfg), "mlp": init_mlp(k2, cfg, cfg.d_ff)}
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg), "self": _init_xattn(k1, cfg),
+            "lnx": init_norm(cfg), "cross": _init_xattn(k2, cfg),
+            "ln2": init_norm(cfg), "mlp": init_mlp(k3, cfg, cfg.d_ff)}
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed_tokens": embed_init(ks[2], (cfg.padded_vocab, cfg.d_model),
+                                   dtype_of(cfg)),
+        "enc_layers": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg),
+        "dec_layers": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    B, S, d = frames.shape
+    x = frames.astype(dtype_of(cfg)) + sinusoid(S, d, dtype_of(cfg))[None]
+    x = cs(x, "batch", "seq", "embed")
+    full = jnp.ones((1, S, S), bool)
+
+    def body(xc, p):
+        h = apply_norm(p["ln1"], xc, cfg)
+        k, v = _kv(p["attn"], h, cfg)
+        xc = xc + _attend(p["attn"], h, k, v, cfg, full)
+        h = apply_norm(p["ln2"], xc, cfg)
+        return xc + apply_mlp(p["mlp"], h, cfg), 0.0
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, p: body_fn(c, p), x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def _decode_blocks(params, x, enc_out, cfg: ModelConfig, mode,
+                   caches=None, pos=None):
+    B, T, _ = x.shape
+    if mode == "decode":
+        self_mask = None  # built per step below
+    else:
+        self_mask = causal_mask(T, T)[None]
+    enc_mask = jnp.ones((1, T, enc_out.shape[1]), bool) if enc_out is not None \
+        else None
+
+    def body(carry, layer):
+        xc = carry
+        p, cache = layer
+        h = apply_norm(p["ln1"], xc, cfg)
+        if mode == "decode":
+            k1, v1 = _kv(p["self"], h, cfg)
+            kc = jax.lax.dynamic_update_slice(cache["self"]["k"], k1,
+                                              (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["self"]["v"], v1,
+                                              (0, pos, 0, 0))
+            m = (jnp.arange(kc.shape[1]) <= pos)[None, None, :]
+            xc = xc + _attend(p["self"], h, kc, vc, cfg, m)
+            new_cache = {"self": {"k": kc, "v": vc}, "cross": cache["cross"]}
+            h = apply_norm(p["lnx"], xc, cfg)
+            mC = jnp.ones((1, 1, cache["cross"]["k"].shape[1]), bool)
+            xc = xc + _attend(p["cross"], h, cache["cross"]["k"],
+                              cache["cross"]["v"], cfg, mC)
+        else:
+            k1, v1 = _kv(p["self"], h, cfg)
+            xc = xc + _attend(p["self"], h, k1, v1, cfg, self_mask)
+            h = apply_norm(p["lnx"], xc, cfg)
+            ke, ve = _kv(p["cross"], enc_out, cfg)
+            xc = xc + _attend(p["cross"], h, ke, ve, cfg, enc_mask)
+            new_cache = ({"self": {"k": k1, "v": v1},
+                          "cross": {"k": ke, "v": ve}}
+                         if mode == "prefill" else jnp.zeros(()))
+        h = apply_norm(p["ln2"], xc, cfg)
+        return xc + apply_mlp(p["mlp"], h, cfg), new_cache
+
+    body_fn = (jax.checkpoint(body)
+               if (cfg.remat and mode == "train") else body)
+    if caches is None:
+        dummy = jnp.zeros(
+            (jax.tree_util.tree_leaves(params["dec_layers"])[0].shape[0],),
+            jnp.int32)
+
+        def body2(c, layer):
+            p, _ = layer
+            return body_fn(c, (p, None))
+
+        x, ncs = jax.lax.scan(body2, x, (params["dec_layers"], dummy))
+    else:
+        x, ncs = jax.lax.scan(body_fn, x, (params["dec_layers"], caches))
+    return x, ncs
+
+
+def _logits(params, x, cfg: ModelConfig):
+    logits = x @ params["embed_tokens"].T
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, T = tokens.shape
+    x = params["embed_tokens"][tokens] + \
+        sinusoid(T, cfg.d_model, dtype_of(cfg))[None]
+    x, _ = _decode_blocks(params, x, enc_out, cfg, "train")
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, x, cfg)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, {"nll": nll, "aux": jnp.zeros(())}
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Encode + run the decoder prompt, returning decode-ready caches."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = params["embed_tokens"][tokens] + \
+        sinusoid(T, cfg.d_model, dtype_of(cfg))[None]
+    x, caches = _decode_blocks(params, x, enc_out, cfg, "prefill")
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, x, cfg)
+    return logits[:, -1:, :], {"dec": caches}
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig):
+    x = params["embed_tokens"][token]
+    T = x.shape[1]
+    posv = sinusoid(WHISPER_MAX_TARGET, cfg.d_model, dtype_of(cfg))
+    x = x + jax.lax.dynamic_slice(posv, (pos, 0), (1, cfg.d_model))[None]
+    x, ncs = _decode_blocks(params, x, None, cfg, "decode",
+                            caches=caches["dec"], pos=pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, x, cfg)
+    return logits, {"dec": ncs}
+
+
+def init_caches(cfg: ModelConfig, batch: int, enc_len: int):
+    dt = dtype_of(cfg)
+    L = cfg.n_layers
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    self_kv = jnp.zeros((L, batch, WHISPER_MAX_TARGET, hkv, hd), dt)
+    cross_kv = jnp.zeros((L, batch, enc_len, hkv, hd), dt)
+    return {"dec": {"self": {"k": self_kv, "v": self_kv},
+                    "cross": {"k": cross_kv, "v": cross_kv}}}

@@ -1,0 +1,125 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers — params are created lazily; dry-run uses jax.eval_shape.
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: int | None = None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """Per-head q/k RMS norm (qwen3 qk_norm). x: (..., hd)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, dim: int, theta: float):
+    """positions: (...,) int -> cos/sin of shape (..., dim)."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., dim); cos/sin: broadcastable (..., dim//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, d_ff), dt),
+            "w_up": dense_init(ks[1], (d, d_ff), dt),
+            "w_down": dense_init(ks[2], (d_ff, d), dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, d_ff), dt),
+        "w_down": dense_init(ks[1], (d_ff, d), dt),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]
+
+
+def mlp_einsum(ws, x, cfg: ModelConfig):
+    """Batched-expert MLP: ws leaves have a leading expert axis E.
+
+    x: (E, C, d) -> (E, C, d).
+    """
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, ws["w_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", x, ws["w_up"])
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", x, ws["w_up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, ws["w_up"]),
+                        approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, ws["w_down"])

@@ -1,0 +1,316 @@
+"""Recurrent mixers: xLSTM's mLSTM / sLSTM and a Mamba-style selective SSM.
+
+Design notes (DESIGN.md §Hardware adaptation):
+  * mLSTM uses the *chunkwise-parallel* form — intra-chunk terms are dense
+    (MXU-friendly) and the cross-chunk recurrence is a lax.scan over chunk
+    summaries, giving O(T·c) instead of O(T^2) work: this is what makes the
+    long_500k shape tractable.
+  * sLSTM and Mamba keep a faithful sequential lax.scan (their recurrences
+    are input-dependent in a way that defeats simple chunking); decode is a
+    single step either way, and the scan lowers to a while-loop whose body
+    is compiled once.
+  * Gate activations are sigmoid-stabilized variants (the official exp-gating
+    with max-stabilizer is replaced by sigmoid forget / sigmoid input gates);
+    this keeps state bounded without the m_t bookkeeping.
+
+All states are fp32; inputs/outputs follow cfg.dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import cs
+from .config import ModelConfig
+from .layers import dense_init, dtype_of
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM): chunkwise-parallel linear-attention style
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    return {
+        "w_q": dense_init(ks[0], (d, H * hd), dt),
+        "w_k": dense_init(ks[1], (d, H * hd), dt),
+        "w_v": dense_init(ks[2], (d, H * hd), dt),
+        "w_if": dense_init(ks[3], (d, 2 * H), dt),   # input & forget gates
+        "w_o": dense_init(ks[4], (H * hd, d), dt),
+        "out_gate": dense_init(ks[5], (d, H * hd), dt),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+    }
+
+
+def _mlstm_chunk(carry, inp, hd):
+    """One chunk: q,k,v: (B,c,H,hd); i,f: (B,c,H) in (0,1)."""
+    C, n = carry                      # (B,H,hd,hd), (B,H,hd)
+    q, k, v, ig, fg = inp
+    B, c, H, _ = q.shape
+    logf = jnp.log(fg + 1e-8)                       # (B,c,H)
+    cumf = jnp.cumsum(logf, axis=1)                 # prod f_1..t
+    # inter-chunk: state decayed to step t
+    decay_to_t = jnp.exp(cumf)                      # (B,c,H)
+    h_inter = jnp.einsum("bhde,bche->bchd", C, q) * decay_to_t[..., None]
+    n_inter = jnp.einsum("bhd,bchd->bch", n, q) * decay_to_t
+    # intra-chunk: D[t,s] = exp(cumf_t - cumf_s) * i_s for s <= t
+    dmat = cumf[:, :, None, :] - cumf[:, None, :, :]          # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    dmat = jnp.where(tri[None, :, :, None], jnp.exp(dmat), 0.0)
+    dmat = dmat * ig[:, None, :, :]                            # * i_s
+    scores = jnp.einsum("bthd,bshd->btsh", q, k).astype(jnp.float32)
+    w = scores * dmat
+    h_intra = jnp.einsum("btsh,bshd->bthd", w.astype(v.dtype), v)
+    n_intra = jnp.einsum("btsh,bshd->bth", w, k.astype(jnp.float32))
+    h = h_inter + h_intra
+    norm = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)[..., None]
+    h = h / norm
+    # carry update
+    decay_all = jnp.exp(cumf[:, -1])                           # (B,H)
+    w_end = jnp.exp(cumf[:, -1:, :] - cumf) * ig               # (B,c,H)
+    C_new = C * decay_all[..., None, None] + jnp.einsum(
+        "bch,bchd,bche->bhde", w_end, v.astype(jnp.float32),
+        k.astype(jnp.float32))
+    n_new = n * decay_all[..., None] + jnp.einsum(
+        "bch,bchd->bhd", w_end, k.astype(jnp.float32))
+    return (C_new, n_new), h
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, state=None):
+    """x: (B, T, d); T must be a multiple of chunk (padded by caller)."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    c = min(cfg.chunk_size, T)
+    assert T % c == 0, "caller must pad to chunk multiple"
+    q = (x @ p["w_q"]).reshape(B, T, H, hd) / jnp.sqrt(hd)
+    k = (x @ p["w_k"]).reshape(B, T, H, hd) / jnp.sqrt(hd)
+    v = (x @ p["w_v"]).reshape(B, T, H, hd)
+    gates = jax.nn.sigmoid((x @ p["w_if"]).astype(jnp.float32))
+    ig, fg = gates[..., :H], gates[..., H:]
+    nchunks = T // c
+
+    def to_chunks(a):
+        return a.reshape(B, nchunks, c, *a.shape[2:]).swapaxes(0, 1)
+
+    st = state or mlstm_state(cfg, B)
+    carry = (st["C"], st["n"])
+    (C_f, n_f), hs = jax.lax.scan(
+        lambda cr, ch: _mlstm_chunk(cr, ch, hd), carry,
+        tuple(map(to_chunks, (q, k, v, ig, fg))))
+    h = hs.swapaxes(0, 1).reshape(B, T, H * hd).astype(x.dtype)
+    h = h * jax.nn.sigmoid(x @ p["out_gate"])
+    out = h @ p["w_o"]
+    return cs(out, "batch", "seq", "embed"), {"C": C_f, "n": n_f}
+
+
+def mlstm_decode(p, x, state, cfg: ModelConfig):
+    """Single-step recurrent update. x: (B, 1, d)."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["w_q"]).reshape(B, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    k = (x @ p["w_k"]).reshape(B, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = (x @ p["w_v"]).reshape(B, H, hd).astype(jnp.float32)
+    gates = jax.nn.sigmoid((x @ p["w_if"]).astype(jnp.float32)).reshape(B, 2 * H)
+    ig, fg = gates[:, :H], gates[:, H:]
+    C = state["C"] * fg[..., None, None] + \
+        ig[..., None, None] * v[..., :, None] * k[..., None, :]
+    n = state["n"] * fg[..., None] + ig[..., None] * k
+    h = jnp.einsum("bhde,bhe->bhd", C, q)
+    norm = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    h = (h / norm[..., None]).reshape(B, 1, H * hd).astype(x.dtype)
+    h = h * jax.nn.sigmoid(x @ p["out_gate"])
+    return h @ p["w_o"], {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with recurrent gates) — sequential scan
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * H * hd), dt),       # z, i, f, o
+        "r": dense_init(ks[1], (H, hd, 4 * hd), dt, scale=0.5),  # block-diag recurrent
+        "w_o": dense_init(ks[2], (H * hd, d), dt),
+    }
+
+
+def slstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z()}
+
+
+def _slstm_step(p, carry, u, H, hd):
+    c, n, h = carry                     # (B,H,hd) each
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r"].astype(jnp.float32))
+    zi, ii, fi, oi = jnp.split(u.astype(jnp.float32) + rec, 4, axis=-1)
+    z = jnp.tanh(zi)
+    i = jax.nn.sigmoid(ii)
+    f = jax.nn.sigmoid(fi)
+    o = jax.nn.sigmoid(oi)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h), h
+
+
+def slstm_forward(p, x, cfg: ModelConfig, state=None):
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    u = (x @ p["w_in"]).reshape(B, T, H, 4 * hd)
+    st = state or slstm_state(cfg, B)
+    (c, n, h), hs = jax.lax.scan(
+        lambda cr, ut: _slstm_step(p, cr, ut, H, hd),
+        (st["c"], st["n"], st["h"]), u.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1).reshape(B, T, H * hd).astype(x.dtype) @ p["w_o"]
+    return cs(out, "batch", "seq", "embed"), {"c": c, "n": n, "h": h}
+
+
+def slstm_decode(p, x, state, cfg: ModelConfig):
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    u = (x @ p["w_in"]).reshape(B, H, 4 * hd)
+    (c, n, h), hh = _slstm_step(p, (state["c"], state["n"], state["h"]), u, H, hd)
+    out = hh.reshape(B, 1, H * hd).astype(x.dtype) @ p["w_o"]
+    return out, {"c": c, "n": n, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's SSM heads) — sequential scan
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, d_out: int | None = None):
+    d = cfg.d_model
+    di = int(cfg.d_inner_mult * d)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dt),          # u, z
+        "w_bcdt": dense_init(ks[1], (di, 2 * N + 1), dt),    # B, C, dt
+        "a_log": jnp.zeros((di, N), jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "dt_bias": jnp.zeros((di,), jnp.float32) - 4.0,
+        "w_out": dense_init(ks[2], (di, d_out or d), dt),
+    }
+
+
+def mamba_state(cfg: ModelConfig, batch: int):
+    di = int(cfg.d_inner_mult * cfg.d_model)
+    return {"s": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)}
+
+
+def _mamba_step(p, s, u_t, z_t, N):
+    """u_t, z_t: (B, di)."""
+    uf = u_t.astype(jnp.float32)
+    bcdt = (u_t @ p["w_bcdt"]).astype(jnp.float32)            # (B, 2N+1)
+    Bv, Cv, dt_raw = bcdt[:, :N], bcdt[:, N : 2 * N], bcdt[:, -1:]
+    delta = jax.nn.softplus(dt_raw + p["dt_bias"][None, :1])  # (B,1) scalar-ish
+    A = -jnp.exp(p["a_log"])                                  # (di, N)
+    decay = jnp.exp(delta[..., None] * A[None])               # (B, di, N)
+    s = s * decay + (delta * uf)[..., None] * Bv[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", s, Cv) + p["d_skip"] * uf
+    y = y * jax.nn.silu(z_t.astype(jnp.float32))
+    return s, y
+
+
+def mamba_forward_sequential(p, x, cfg: ModelConfig, state=None):
+    """Reference per-timestep scan (the GPU-kernel-shaped formulation).
+
+    Kept as the numerical oracle for the chunkwise path and as a fallback
+    for sequence lengths that don't chunk; T sequential steps lower to a
+    T-trip while loop — latency-bound on TPU (see EXPERIMENTS.md §Perf).
+    """
+    B, T, d = x.shape
+    N = cfg.ssm_state
+    uz = x @ p["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    st = state or mamba_state(cfg, B)
+
+    def step(s, inp):
+        u_t, z_t = inp
+        s, y = _mamba_step(p, s, u_t, z_t, N)
+        return s, y
+
+    s_f, ys = jax.lax.scan(step, st["s"], (u.swapaxes(0, 1), z.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).astype(x.dtype) @ p["w_out"]
+    return cs(y, "batch", "seq", "embed"), {"s": s_f}
+
+
+def mamba_forward(p, x, cfg: ModelConfig, state=None):
+    """Chunkwise-parallel selective scan (TPU-native adaptation).
+
+    The recurrence s_t = decay_t * s_{t-1} + w_t is linear with a diagonal
+    transition, so within a chunk of length c we run an exact
+    associative_scan over (decay, w) pairs — log2(c) parallel elementwise
+    steps instead of c sequential ones — and carry only the chunk-final
+    state across chunks (a T/c-trip lax.scan). No decay-division trick, so
+    it is numerically exact (combine is multiply-add in fp32).
+
+    vs the sequential form on train_4k this cuts the lowered while-loop
+    trip count 4096 -> 16 and turns the inner work into batched tensor ops
+    (EXPERIMENTS.md §Perf, hymba cell).
+    """
+    B, T, d = x.shape
+    N = cfg.ssm_state
+    c = min(cfg.chunk_size, T)
+    if T % c != 0 or T == 1:
+        return mamba_forward_sequential(p, x, cfg, state)
+    uz = x @ p["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)                        # (B,T,di)
+    st = state or mamba_state(cfg, B)
+    di = u.shape[-1]
+    bcdt = (u @ p["w_bcdt"]).astype(jnp.float32)            # (B,T,2N+1)
+    Bv, Cv = bcdt[..., :N], bcdt[..., N:2 * N]
+    delta = jax.nn.softplus(bcdt[..., -1:] + p["dt_bias"][None, None, :1])
+    A = -jnp.exp(p["a_log"])                                # (di,N)
+    uf = u.astype(jnp.float32)
+    nchunks = T // c
+
+    def to_chunks(a):
+        return a.reshape(B, nchunks, c, *a.shape[2:]).swapaxes(0, 1)
+
+    def combine(left, right):
+        dl, xl = left
+        dr, xr = right
+        return dl * dr, xr + dr * xl
+
+    def chunk_body(s0, inp):
+        u_c, delta_c, Bv_c, Cv_c = inp                      # (B,c,...)
+        decay = jnp.exp(delta_c[..., None] * A[None, None])  # (B,c,di,N)
+        w = (delta_c * u_c)[..., None] * Bv_c[:, :, None, :]
+        dec_pfx, s_pfx = jax.lax.associative_scan(
+            combine, (decay, w), axis=1)
+        s_all = dec_pfx * s0[:, None] + s_pfx               # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", s_all, Cv_c)
+        return s_all[:, -1], y
+
+    s_f, ys = jax.lax.scan(
+        chunk_body, st["s"],
+        tuple(map(to_chunks, (uf, delta, Bv, Cv))))
+    y = ys.swapaxes(0, 1).reshape(B, T, di)
+    y = y + p["d_skip"] * uf
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype) @ p["w_out"]
+    return cs(y, "batch", "seq", "embed"), {"s": s_f}
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    B = x.shape[0]
+    uz = x[:, 0, :] @ p["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    s, y = _mamba_step(p, state["s"], u, z, cfg.ssm_state)
+    out = y[:, None, :].astype(x.dtype) @ p["w_out"]
+    return out, {"s": s}

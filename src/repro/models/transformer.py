@@ -1,0 +1,338 @@
+"""Decoder-only LM assembly for dense / MoE / VLM / SSM / hybrid families.
+
+Pure-functional: ``init_params`` builds the param pytree (stacked layers for
+lax.scan on deep homogeneous stacks), ``loss_fn`` / ``prefill`` /
+``decode_step`` are the three entry points the launchers jit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import cs
+from .attention import (
+    gqa_cache_spec, gqa_decode, gqa_forward,
+    mla_cache_spec, mla_decode, mla_forward,
+)
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, dtype_of, embed_init, init_mlp, init_norm
+from .moe import init_moe, moe_forward
+from .ssm import (
+    init_mamba, init_mlstm, init_slstm,
+    mamba_decode, mamba_forward, mamba_state,
+    mlstm_decode, mlstm_forward, mlstm_state,
+    slstm_decode, slstm_forward, slstm_state,
+)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig):
+    from .attention import init_gqa, init_mla
+    return init_mla(key, cfg) if cfg.attn_type == "mla" else init_gqa(key, cfg)
+
+
+def init_block(key, cfg: ModelConfig, moe: bool, kind: str = "attn"):
+    """kind: attn | hybrid | m | s (xlstm blocks)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": init_norm(cfg)}
+    if kind == "attn":
+        p["attn"] = _init_attn(k1, cfg)
+    elif kind == "hybrid":
+        p["attn"] = _init_attn(k1, cfg)
+        p["ssm"] = init_mamba(k4, cfg, d_out=cfg.d_model)
+    elif kind == "m":
+        p["mix"] = init_mlstm(k1, cfg)
+    elif kind == "s":
+        p["mix"] = init_slstm(k1, cfg)
+    if cfg.d_ff > 0 and kind in ("attn", "hybrid"):
+        p["ln2"] = init_norm(cfg)
+        p["moe" if moe else "mlp"] = (
+            init_moe(k2, cfg) if moe else init_mlp(k2, cfg, cfg.d_ff))
+    return p
+
+
+def _apply_ffn(p, x, cfg: ModelConfig):
+    """Returns (delta, aux)."""
+    if "moe" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        y, aux = moe_forward(p["moe"], h, cfg)
+        return y, aux
+    if "mlp" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        return apply_mlp(p["mlp"], h, cfg), 0.0
+    return jnp.zeros_like(x), 0.0
+
+
+def block_forward(p, x, cfg: ModelConfig, kind: str, window: int,
+                  mode: str, cache=None, pos=None, state=None):
+    """One block; returns (x, new_cache_or_state, aux)."""
+    h = apply_norm(p["ln1"], x, cfg)
+    aux = 0.0
+    if kind == "attn":
+        if mode == "decode":
+            if cfg.attn_type == "mla":
+                a, nc = mla_decode(p["attn"], h, cache, pos, cfg)
+            else:
+                a, nc = gqa_decode(p["attn"], h, cache, pos, cfg, window)
+        else:
+            if cfg.attn_type == "mla":
+                a, nc = mla_forward(p["attn"], h, cfg)
+            else:
+                a, nc = gqa_forward(p["attn"], h, cfg, window=window)
+        x = x + a
+    elif kind == "hybrid":
+        if mode == "decode":
+            a, nc_attn = gqa_decode(p["attn"], h, cache["attn"], pos, cfg, window)
+            s, nc_ssm = mamba_decode(p["ssm"], h, cache["ssm"], cfg)
+        else:
+            a, nc_attn = gqa_forward(p["attn"], h, cfg, window=window)
+            s, nc_ssm = mamba_forward(p["ssm"], h, cfg)
+        x = x + 0.5 * (a + s)
+        nc = {"attn": nc_attn, "ssm": nc_ssm}
+    elif kind in ("m", "s"):
+        fwd = {"m": (mlstm_forward, mlstm_decode),
+               "s": (slstm_forward, slstm_decode)}[kind]
+        if mode == "decode":
+            a, nc = fwd[1](p["mix"], h, cache, cfg)
+        else:
+            a, nc = fwd[0](p["mix"], h, cfg, state=cache)
+        x = x + a
+    else:
+        raise ValueError(kind)
+    y, aux = _apply_ffn(p, x, cfg)
+    return x + y, nc, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def _layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "ssm":
+        pat = cfg.block_pattern or ("m", "s")
+        return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return ["hybrid"] * cfg.n_layers
+    return ["attn"] * cfg.n_layers
+
+
+def _layer_windows(cfg: ModelConfig) -> list[int]:
+    out = []
+    for i in range(cfg.n_layers):
+        if cfg.sliding_window and i not in cfg.global_attn_layers:
+            out.append(cfg.sliding_window)
+        else:
+            out.append(0)
+    return out
+
+
+def uses_scan(cfg: ModelConfig) -> bool:
+    """Scan only over deep, fully homogeneous attention stacks."""
+    return (cfg.scan_layers and cfg.family in ("dense", "moe", "vlm")
+            and not cfg.sliding_window)
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    dt = dtype_of(cfg)
+    params = {
+        "embed_tokens": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[1], (cfg.d_model, cfg.padded_vocab), dt)
+    kinds = _layer_kinds(cfg)
+    n_prefix = cfg.moe_dense_prefix if cfg.is_moe else 0
+    if uses_scan(cfg):
+        # dense prefix blocks stay unstacked; the homogeneous tail is stacked.
+        params["prefix"] = [
+            init_block(ks[2 + i], cfg, moe=False) for i in range(n_prefix)]
+        tail = cfg.n_layers - n_prefix
+        keys = jax.random.split(ks[2 + n_prefix], tail)
+        params["layers"] = jax.vmap(
+            lambda k: init_block(k, cfg, moe=cfg.is_moe))(keys)
+    else:
+        params["blocks"] = [
+            init_block(ks[2 + i], cfg, moe=cfg.is_moe and i >= n_prefix,
+                       kind=kinds[i])
+            for i in range(cfg.n_layers)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """tokens (+ optional prefix embeds for VLM) -> (B, T, d)."""
+    x = params["embed_tokens"][batch["tokens"]]
+    if cfg.n_prefix_embeds and "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    return cs(x, "batch", "seq", "embed")
+
+
+def _lm_logits(params, x, cfg: ModelConfig):
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = (params["embed_tokens"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = x @ head
+    if cfg.padded_vocab != cfg.vocab:  # mask padding columns out of softmax
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return cs(logits, "batch", "seq", "vocab")
+
+
+def _scan_stack(params, x, cfg: ModelConfig, mode: str, caches=None, pos=None):
+    """lax.scan over the stacked homogeneous layers."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, layer):
+        xc, aux = carry
+        p, cache = layer
+        xc, nc, a = block_forward(p, xc, cfg, "attn", 0, mode,
+                                  cache=cache, pos=pos)
+        return (xc, aux + a), nc
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+    n_tail = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    if caches is None:
+        # scan xs must be arrays: thread a dummy per-layer token instead of
+        # the (absent) cache; drop the produced caches in train mode so the
+        # full-sequence K/V stacks are never materialized.
+        dummy = jnp.zeros((n_tail,), jnp.int32)
+
+        def body2(carry, layer):
+            p, _ = layer
+            out, nc = body_fn(carry, (p, None))
+            return out, (nc if mode == "prefill" else jnp.zeros(()))
+
+        (x, aux), new_caches = jax.lax.scan(body2, (x, aux0),
+                                            (params["layers"], dummy))
+    else:
+        (x, aux), new_caches = jax.lax.scan(body_fn, (x, aux0),
+                                            (params["layers"], caches))
+    return x, aux, new_caches
+
+
+def forward(params, batch, cfg: ModelConfig, mode: str = "train",
+            caches=None, pos=None):
+    """Full-sequence forward. Returns (logits, aux, caches)."""
+    x = _embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    kinds = _layer_kinds(cfg)
+    windows = _layer_windows(cfg)
+    new_caches: dict = {}
+    want_cache = mode == "prefill"
+    if uses_scan(cfg):
+        pcaches = []
+        for i, bp in enumerate(params.get("prefix", [])):
+            x, nc, a = block_forward(bp, x, cfg, "attn", 0, mode)
+            aux += a
+            pcaches.append(nc)
+        x, a, stacked = _scan_stack(params, x, cfg,
+                                    "prefill" if want_cache else "train")
+        aux += a
+        if want_cache:
+            new_caches = {"prefix": pcaches, "layers": stacked}
+    else:
+        blocks_c = []
+        for i, bp in enumerate(params["blocks"]):
+            fn = (jax.checkpoint(block_forward,
+                                 static_argnums=(2, 3, 4, 5))
+                  if (cfg.remat and mode == "train") else block_forward)
+            x, nc, a = fn(bp, x, cfg, kinds[i], windows[i], mode)
+            aux += a
+            blocks_c.append(nc)
+        if want_cache:
+            new_caches = {"blocks": blocks_c}
+    logits = _lm_logits(params, x, cfg)
+    return logits, aux, (new_caches if want_cache else None)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token cross-entropy (+ MoE aux). batch: tokens (B, T), labels (B, T)."""
+    logits, aux, _ = forward(params, batch, cfg, mode="train")
+    labels = batch["labels"]
+    if cfg.n_prefix_embeds and "prefix_embeds" in batch:
+        # only text positions have labels; image prefix is unsupervised
+        logits = logits[:, batch["prefix_embeds"].shape[1]:, :]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Returns (last-position logits, caches) for subsequent decode."""
+    logits, _, caches = forward(params, batch, cfg, mode="prefill")
+    return logits[:, -1:, :], caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig):
+    """One decode step. token: (B, 1) int32; pos: scalar int32."""
+    x = params["embed_tokens"][token]
+    x = cs(x, "batch", None, "embed")
+    kinds = _layer_kinds(cfg)
+    windows = _layer_windows(cfg)
+    if uses_scan(cfg):
+        new_prefix = []
+        for bp, c in zip(params.get("prefix", []), caches.get("prefix", [])):
+            x, nc, _ = block_forward(bp, x, cfg, "attn", 0, "decode",
+                                     cache=c, pos=pos)
+            new_prefix.append(nc)
+        x, _, stacked = _scan_stack(params, x, cfg, "decode",
+                                    caches=caches["layers"], pos=pos)
+        new_caches = {"prefix": new_prefix, "layers": stacked}
+    else:
+        blocks_c = []
+        for i, (bp, c) in enumerate(zip(params["blocks"], caches["blocks"])):
+            x, nc, _ = block_forward(bp, x, cfg, kinds[i], windows[i],
+                                     "decode", cache=c, pos=pos)
+            blocks_c.append(nc)
+        new_caches = {"blocks": blocks_c}
+    logits = _lm_logits(params, x, cfg)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _one_cache(cfg: ModelConfig, kind: str, window: int, batch: int, seq: int):
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            return mla_cache_spec(cfg, batch, seq)
+        return gqa_cache_spec(cfg, batch, seq, window)
+    if kind == "hybrid":
+        return {"attn": gqa_cache_spec(cfg, batch, seq, window),
+                "ssm": mamba_state(cfg, batch)}
+    if kind == "m":
+        return mlstm_state(cfg, batch)
+    if kind == "s":
+        return slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int):
+    """Zero caches sized for a seq_len-token context (dry-run: via eval_shape)."""
+    kinds = _layer_kinds(cfg)
+    windows = _layer_windows(cfg)
+    if uses_scan(cfg):
+        n_prefix = cfg.moe_dense_prefix if cfg.is_moe else 0
+        tail = cfg.n_layers - n_prefix
+        one = _one_cache(cfg, "attn", 0, batch, seq)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (tail,) + a.shape), one)
+        return {"prefix": [_one_cache(cfg, "attn", 0, batch, seq)
+                           for _ in range(n_prefix)],
+                "layers": stacked}
+    return {"blocks": [
+        _one_cache(cfg, kinds[i], windows[i], batch, seq)
+        for i in range(cfg.n_layers)]}

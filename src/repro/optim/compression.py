@@ -1,0 +1,102 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Matches the paper's PS use case (§5.3): workers send *sparsified* gradients
+and in-network aggregation unions them — the byte-complexity model the
+paper evaluates. Two codecs:
+
+  * top-k magnitude sparsification (ratio of entries kept per leaf);
+  * int8 per-leaf absmax quantization.
+
+Both carry an error-feedback accumulator (Karimireddy et al.-style): the
+un-sent residual is added to the next step's gradient, so every coordinate
+is eventually transmitted and SGD converges at the uncompressed rate.
+
+The compressed gradient stays a dense array with zeros (sum-compatible with
+any reduction tree, including the SOAR collective); the *bandwidth* saving
+is the sparse payload (indices+values / int8 bytes) reported by
+``payload_bytes`` — the same size model the paper's PS evaluation uses.
+``kernels/topk_compress`` is the Pallas TPU kernel for the top-k selection;
+this module is the jnp path used by the driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"            # none | topk | int8
+    ratio: float = 0.01           # topk: fraction of entries kept per leaf
+
+    @staticmethod
+    def parse(spec: str | None) -> "CompressionConfig":
+        """"topk:0.01" / "int8" / None."""
+        if not spec or spec == "none":
+            return CompressionConfig()
+        if spec.startswith("topk"):
+            ratio = float(spec.split(":")[1]) if ":" in spec else 0.01
+            return CompressionConfig("topk", ratio)
+        if spec == "int8":
+            return CompressionConfig("int8")
+        raise ValueError(f"unknown compression spec {spec!r}")
+
+
+def init_error_feedback(params: Any):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_leaf(g32, ratio: float):
+    n = g32.size
+    k = max(1, int(round(ratio * n)))
+    flat = g32.reshape(-1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    sent = jnp.where(mask, flat, 0.0).reshape(g32.shape)
+    return sent, g32 - sent
+
+
+def _int8_leaf(g32):
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    sent = q.astype(jnp.float32) * scale
+    return sent, g32 - sent
+
+
+def compress_tree(grads: Any, ef: Any, cfg: CompressionConfig):
+    """(grads, error_feedback) -> (sent_grads, new_error_feedback).
+
+    sent_grads is dense (zeros where dropped) in the original dtype.
+    """
+    if cfg.kind == "none":
+        return grads, ef
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if cfg.kind == "topk":
+            sent, resid = _topk_leaf(g32, cfg.ratio)
+        else:
+            sent, resid = _int8_leaf(g32)
+        return sent.astype(g.dtype), resid
+
+    out = jax.tree.map(one, grads, ef)
+    sent = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return sent, new_ef
+
+
+def payload_bytes(params: Any, cfg: CompressionConfig) -> int:
+    """Per-worker message size under the codec (the PS byte model)."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    if cfg.kind == "none":
+        return 4 * n
+    if cfg.kind == "int8":
+        return n + 4 * len(jax.tree.leaves(params))   # int8 + scale/leaf
+    k = sum(max(1, int(round(cfg.ratio * p.size)))
+            for p in jax.tree.leaves(params))
+    return 8 * k                                       # index + value

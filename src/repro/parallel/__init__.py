@@ -1,0 +1,13 @@
+from .sharding import (
+    AxisRules,
+    axis_rules,
+    cs,
+    current_rules,
+    logical_spec,
+    param_sharding_specs,
+)
+
+__all__ = [
+    "AxisRules", "axis_rules", "cs", "current_rules", "logical_spec",
+    "param_sharding_specs",
+]

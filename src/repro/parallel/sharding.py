@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Model code annotates activations with *logical* axis names via ``cs(x, ...)``;
+a launcher installs an :class:`AxisRules` mapping logical names to mesh axes.
+Without installed rules every annotation is a no-op, so the same model code
+runs in single-device smoke tests and in the 512-device dry-run.
+
+Parameter shardings are assigned by leaf-path regex (``param_sharding_specs``),
+so any pytree produced by the model inits gets a complete sharding without
+per-module plumbing.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class AxisRules(dict):
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+
+# Default production rules: batch over (pod, data); model-parallel dims over
+# `model`; FSDP weight shard over (pod, data).
+def make_rules(multi_pod: bool, seq_shard: bool = False,
+               fsdp: bool = True) -> AxisRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return AxisRules(
+        batch=dp,
+        seq="model" if seq_shard else None,   # SP: shard long sequences
+        embed=None,
+        heads="model",
+        kv_heads="model",
+        ff="model",
+        vocab="model",
+        experts="model",
+        expert_cap=None,
+        fsdp=dp if fsdp else None,
+        tokens_flat=dp + ("model",),          # MoE dispatch: full flattening
+        state="model",
+    )
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules | None, mesh=None):
+    prev = getattr(_STATE, "rules", None)
+    prev_mesh = getattr(_STATE, "mesh", None)
+    _STATE.rules = rules
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+        _STATE.mesh = prev_mesh
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def current_mesh():
+    """Mesh installed alongside the rules (for shard_map'd interiors)."""
+    return getattr(_STATE, "mesh", None)
+
+
+def logical_spec(*names: str | None) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(n) if n else None for n in names])
+
+
+def cs(x, *names: str | None):
+    """Constrain activation sharding by logical axis names (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_spec(*names))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by leaf path
+# ---------------------------------------------------------------------------
+
+# Order matters: first match wins. Patterns run against '/'-joined tree paths.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r".*embed_tokens$",           ("vocab", "fsdp")),
+    (r".*lm_head$",                ("fsdp", "vocab")),
+    (r".*pos_embed$",              (None, "fsdp")),
+    # MoE expert stacks: (E, d, ff) / (E, ff, d)
+    (r".*experts/w_(gate|up)$",    ("experts", "fsdp", None)),
+    (r".*experts/w_down$",         ("experts", None, "fsdp")),
+    (r".*router/w$",               ("fsdp", None)),
+    # attention projections
+    (r".*w_q$|.*w_uq$",            ("fsdp", "heads")),
+    (r".*w_(k|v)$",                ("fsdp", "heads")),
+    (r".*w_o$",                    ("heads", "fsdp")),
+    (r".*w_dq$|.*w_dkv$",          ("fsdp", None)),
+    (r".*w_ukv$",                  (None, "heads")),
+    # dense MLPs: (d, ff) / (ff, d)
+    (r".*w_(gate|up)$",            ("fsdp", "ff")),
+    (r".*w_down$",                 ("ff", "fsdp")),
+    # SSM mixers
+    (r".*ssm/(w_in|w_x)$",         ("fsdp", "heads")),
+    (r".*ssm/w_out$",              ("heads", "fsdp")),
+    (r".*ssm/.*$",                 (None,)),
+    (r".*mix/(w_in|out_gate)$",    ("fsdp", "heads")),
+    # norms / scalars / everything else: replicated
+    (r".*",                        ()),
+]
+
+
+def _spec_for_path(path: str, rules: AxisRules, stacked: bool) -> P:
+    for pat, names in _PARAM_RULES:
+        if re.fullmatch(pat, path):
+            axes = [rules.get(n) if n else None for n in names]
+            if stacked:
+                axes = [None] + axes  # leading scanned-layer axis
+            return P(*axes)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_sharding_specs(params: Any, rules: AxisRules,
+                         stacked_prefixes: tuple = ("layers",)) -> Any:
+    """PartitionSpec pytree matching ``params``.
+
+    Leaves under a subtree named in ``stacked_prefixes`` (the lax.scan layer
+    stacks) get a leading None axis for the layer dimension.
+    """
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        stacked = any(f"/{sp}/" in f"/{ps}/" for sp in stacked_prefixes)
+        spec = _spec_for_path(ps, rules, stacked)
+        if len(spec) > getattr(leaf, "ndim", 0):
+            spec = P(*list(spec)[: leaf.ndim])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)

@@ -1,0 +1,6 @@
+from .orchestrator import Orchestrator, OrchestratorConfig
+from .stragglers import StragglerPolicy, StragglerReport
+from .elastic import rescale
+
+__all__ = ["Orchestrator", "OrchestratorConfig", "StragglerPolicy",
+           "StragglerReport", "rescale"]

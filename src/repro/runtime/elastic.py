@@ -1,0 +1,41 @@
+"""Elastic scaling of the reduction fleet.
+
+``rescale`` rebuilds the cluster topology at a new size and maps the SOAR
+budget onto it. Shrinks reuse the failure path (drop chips, zero load);
+grows re-derive the fleet tree. The parameter/optimizer state itself is
+re-sharded through the checkpoint layer (``checkpoint.restore`` accepts any
+target sharding — save on the old mesh, restore on the new one), so elastic
+events are: drain -> checkpoint -> rescale topology -> re-place blue nodes
+-> restore -> resume.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..collectives.topology import ClusterTopology, fail_devices, fleet_tree
+
+
+def rescale(topo: ClusterTopology, n_pods: int, racks_per_pod: int,
+            chips_per_rack: int) -> ClusterTopology:
+    """Return a fresh fleet tree at the new size (grow or shrink)."""
+    return fleet_tree(n_pods=n_pods, racks_per_pod=racks_per_pod,
+                      chips_per_rack=chips_per_rack)
+
+
+def shrink_by_failure(topo: ClusterTopology, dead: list[int]) -> ClusterTopology:
+    """In-place shrink: keep the tree, drop the dead chips' load."""
+    return fail_devices(topo, dead)
+
+
+def scaling_budget(k: int, old_devices: int, new_devices: int,
+                   policy: str = "proportional") -> int:
+    """How the blue budget moves when the fleet is rescaled.
+
+    proportional: k scales with device count (NaaS per-tenant contract);
+    fixed: the tenant bought k switches, size changes don't alter it.
+    """
+    if policy == "fixed":
+        return k
+    if policy == "proportional":
+        return max(1, round(k * new_devices / max(1, old_devices)))
+    raise ValueError(f"unknown budget policy {policy!r}")

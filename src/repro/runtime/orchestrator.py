@@ -1,0 +1,135 @@
+"""Fault-tolerant orchestration: failures/stragglers -> SOAR re-placement.
+
+The orchestrator owns the cluster reduction tree, the current blue
+placement, and the compiled-in ReduceProgram. Every topology event (device
+failure, straggler quarantine, elastic rescale) triggers the same recovery
+path the paper's model makes cheap:
+
+    update tree/load -> SOAR re-sow (O(n h k^2), milliseconds at fleet
+    scale) -> rebuild the static reduction program -> resume.
+
+Recovery is *bounded*: the budget k and per-switch aggregation capacity
+(Sec. 5.2) are respected across re-placements, so a tenant can never grab
+more in-network resources by failing chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..collectives.schedule import ReduceProgram, build_program, plan
+from ..collectives.topology import ClusterTopology, fail_devices
+from .stragglers import StragglerPolicy, StragglerReport
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    k: int = 4                       # blue-switch budget for this workload
+    strategy: str = "soar"           # placement strategy (soar | baselines)
+    capacity: int | None = None      # per-switch aggregation capacity a(s)
+    straggler_quantile: float = 0.9
+    straggler_slack: float = 2.0
+    straggler_patience: int = 3
+
+
+class Orchestrator:
+    """Owns topology -> placement -> program; replans on events."""
+
+    def __init__(self, topo: ClusterTopology, cfg: OrchestratorConfig):
+        self.cfg = cfg
+        self.topo0 = topo
+        self.topo = topo
+        n = topo.tree.n
+        self.alive = np.ones(topo.n_devices, bool)
+        self.quarantined = np.zeros(topo.n_devices, bool)
+        # residual aggregation capacity (None = unbounded)
+        self._residual = (np.full(n, cfg.capacity, np.int64)
+                          if cfg.capacity is not None else None)
+        self.stragglers = StragglerPolicy(
+            topo.n_devices, quantile=cfg.straggler_quantile,
+            slack=cfg.straggler_slack, patience=cfg.straggler_patience)
+        self.replans = 0
+        self.utilization_history: list[float] = []
+        self.blue: np.ndarray | None = None
+        self.program: ReduceProgram | None = None
+        self._replace()
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def n_alive(self) -> int:
+        return int((self.alive & ~self.quarantined).sum())
+
+    @property
+    def grad_scale(self) -> float:
+        """Gradient renormalization: mean over contributing devices."""
+        return self.topo0.n_devices / max(1, self.n_alive)
+
+    # -- internal ------------------------------------------------------------
+    def _avail(self) -> np.ndarray | None:
+        if self._residual is None:
+            return None
+        return self._residual > 0
+
+    def _replace(self) -> None:
+        """(Re)compute the SOAR placement + reduction program."""
+        if self._residual is not None and self.blue is not None:
+            self._residual[self.blue] += 1  # release the old claim
+        self.blue, self.program = plan(
+            self.topo, self.cfg.k, avail=self._avail(),
+            strategy=self.cfg.strategy)
+        if self._residual is not None:
+            self._residual[self.blue] -= 1
+        self.replans += 1
+        self.utilization_history.append(self.program.utilization)
+
+    def _effective_topo(self) -> ClusterTopology:
+        dead = np.nonzero(~self.alive | self.quarantined)[0]
+        return fail_devices(self.topo0, list(dead))
+
+    # -- event handlers -------------------------------------------------------
+    def on_failure(self, devices: list[int]) -> ReduceProgram:
+        """Hard failure: chips stop producing gradient messages."""
+        for d in devices:
+            if not self.alive[d]:
+                raise ValueError(f"device {d} already dead")
+            self.alive[d] = False
+        if self.n_alive == 0:
+            raise RuntimeError("all devices failed")
+        self.topo = self._effective_topo()
+        self._replace()
+        return self.program
+
+    def on_step_durations(self, durations: np.ndarray) -> StragglerReport:
+        """Feed per-device step durations; quarantine persistent stragglers."""
+        report = self.stragglers.observe(durations)
+        newly = report.quarantined & ~self.quarantined & self.alive
+        if newly.any():
+            self.quarantined |= newly
+            self.topo = self._effective_topo()
+            self._replace()
+        return report
+
+    def on_recover(self, devices: list[int]) -> ReduceProgram:
+        """A replaced/recovered chip rejoins the reduction tree."""
+        for d in devices:
+            self.alive[d] = True
+            self.quarantined[d] = False
+            self.stragglers.clear(d)
+        self.topo = self._effective_topo()
+        self._replace()
+        return self.program
+
+    def begin_workload(self) -> ReduceProgram:
+        """Multi-workload mode (Sec. 5.2): claim capacity for a new workload.
+
+        The previous workload keeps its claim; the new one sees only
+        switches with residual capacity.
+        """
+        if self._residual is None:
+            raise ValueError("begin_workload needs capacity set")
+        blue, prog = plan(self.topo, self.cfg.k, avail=self._avail(),
+                          strategy=self.cfg.strategy)
+        self._residual[blue] -= 1
+        self.utilization_history.append(prog.utilization)
+        return prog

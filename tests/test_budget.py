@@ -1,0 +1,59 @@
+"""Cross-workload budget allocation (paper §8 open problem)."""
+import numpy as np
+import pytest
+
+from repro.core.budget import (allocate_budget, brute_allocate, cost_curve,
+                               uniform_allocate)
+from repro.core.soar import soar
+from repro.core.tree import bt, random_tree, sample_load
+
+
+def _workloads(t, n, seed=0):
+    return [sample_load(t, "power-law" if i % 2 else "uniform",
+                        seed=seed + i) for i in range(n)]
+
+
+def test_cost_curve_matches_soar_pointwise():
+    t = bt(32, "linear")
+    L = sample_load(t, "power-law", seed=1)
+    c = cost_curve(t, L, 6)
+    for k in range(7):
+        assert c[k] == pytest.approx(soar(t, L, k).cost)
+
+
+def test_curve_monotone():
+    t = bt(64, "constant")
+    c = cost_curve(t, sample_load(t, "power-law", seed=2), 12)
+    assert (np.diff(c) <= 1e-9).all()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_greedy_close_to_brute(seed):
+    t = bt(16, "constant")
+    ws = _workloads(t, 3, seed=10 * seed)
+    K = 6
+    b_g, c_g = allocate_budget(t, ws, K)
+    b_b, c_b = brute_allocate(t, ws, K)
+    assert b_g.sum() <= K
+    assert c_g <= c_b * 1.02 + 1e-9          # near-exact on these instances
+    assert c_b <= c_g + 1e-9                 # brute is the floor
+
+
+def test_greedy_beats_uniform():
+    t = bt(64, "exponential")
+    # heterogeneous workloads: some heavy, some trivial
+    ws = _workloads(t, 4, seed=5)
+    ws[0] = ws[0] * 20                        # one workload dominates
+    K = 12
+    _, c_g = allocate_budget(t, ws, K)
+    _, c_u = uniform_allocate(t, ws, K)
+    assert c_g <= c_u + 1e-9
+
+
+def test_budget_never_exceeded_and_zero_budget():
+    t = bt(32, "constant")
+    ws = _workloads(t, 5, seed=3)
+    b, c = allocate_budget(t, ws, 0)
+    assert b.sum() == 0
+    b, _ = allocate_budget(t, ws, 7)
+    assert b.sum() <= 7

@@ -1,0 +1,67 @@
+"""SOAR collective schedule: static program properties + multi-device
+equivalence (subprocess: forced host device count must precede jax init)."""
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.collectives import build_program, chip_level_tree, fleet_tree, plan
+from repro.core.reduce import all_blue, all_red, messages_up, phi
+from repro.core.soar import soar
+
+
+def test_fleet_tree_structure():
+    topo = fleet_tree(n_pods=2, racks_per_pod=4, chips_per_rack=4)
+    assert topo.n_devices == 32
+    assert topo.load.sum() == 32
+    assert topo.tree.height == 2  # spine -> pod -> rack
+
+
+def test_program_message_count_matches_phi_simulator():
+    topo = chip_level_tree(2, 2, 2)
+    for k in (0, 1, 3):
+        blue, prog = plan(topo, k)
+        msgs = messages_up(topo.tree, topo.load, blue)
+        assert prog.total_network_messages == msgs.sum()
+        assert prog.utilization == pytest.approx(
+            phi(topo.tree, topo.load, blue))
+
+
+def test_soar_placement_on_fleet_beats_baselines():
+    topo = fleet_tree(n_pods=2, racks_per_pod=8, chips_per_rack=8)
+    res = soar(topo.tree, topo.load, 4)
+    for s in ("top", "max", "level", "random"):
+        _, prog = plan(topo, 4, strategy=s)
+        assert res.cost <= prog.utilization + 1e-9
+
+
+def test_heterogeneous_rates_prefer_below_dcn_aggregation():
+    """With expensive DCN links, SOAR should aggregate at/below pods."""
+    topo = fleet_tree(n_pods=2, racks_per_pod=4, chips_per_rack=8)
+    res = soar(topo.tree, topo.load, 2)
+    t = topo.tree
+    picked = np.nonzero(res.blue)[0]
+    assert len(picked) == 2
+    # both picks are pod switches (depth 1): collapse 32 msgs before the DCN
+    assert all(t.depth[v] == 1 for v in picked)
+
+
+def test_all_blue_program_sends_one_message_per_edge():
+    topo = chip_level_tree(2, 2, 2)
+    prog = build_program(topo, all_blue(topo.tree))
+    assert prog.total_network_messages == topo.tree.n  # one per up-edge
+
+
+@pytest.mark.slow
+def test_tree_allreduce_equals_psum_subprocess():
+    script = pathlib.Path(__file__).parent / "helpers" / "collective_check.py"
+    env = {"PYTHONPATH": "src"}
+    import os
+    env = {**os.environ, "PYTHONPATH": "src"}
+    out = subprocess.run([sys.executable, str(script)], cwd=str(
+        pathlib.Path(__file__).parent.parent), env=env,
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "COLLECTIVE_CHECK_OK" in out.stdout

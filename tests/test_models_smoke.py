@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, asserting output shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import api
+from repro.models.api import ShapeSpec
+
+SMOKE_SHAPE = ShapeSpec("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+def _reduced(name):
+    return ARCHS[name].reduced()
+
+
+def _batch(cfg, kind="train"):
+    rng = np.random.default_rng(0)
+    spec = dataclasses.replace(SMOKE_SHAPE, kind=kind)
+    zeros = api.input_specs(cfg, spec, mode=kind)
+
+    def rnd(a):
+        if a.dtype == jnp.int32:
+            return jnp.asarray(rng.integers(0, cfg.vocab, a.shape), jnp.int32)
+        return jnp.asarray(rng.normal(size=a.shape), a.dtype)
+
+    return jax.tree.map(rnd, zeros)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_smoke(name):
+    cfg = _reduced(name)
+    params = api.init_fn(cfg)(jax.random.PRNGKey(0))
+    batch = _batch(cfg, "train")
+    loss, metrics = jax.jit(api.loss_fn(cfg))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (name, loss)
+    grads = jax.grad(lambda p: api.loss_fn(cfg)(p, batch)[0])(params)
+    finite = jax.tree.map(lambda g: bool(jnp.all(jnp.isfinite(g))), grads)
+    assert all(jax.tree.leaves(finite)), name
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_then_decode_smoke(name):
+    cfg = _reduced(name)
+    params = api.init_fn(cfg)(jax.random.PRNGKey(0))
+    batch = _batch(cfg, "prefill")
+    logits, caches = jax.jit(api.prefill_fn(cfg))(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert jnp.all(jnp.isfinite(logits)), name
+    # grow to a fixed-capacity decode cache and take two steps
+    dec_caches = api.init_caches(cfg, batch=2, seq=64)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    step = jax.jit(api.decode_fn(cfg))
+    logits1, dec_caches = step(params, dec_caches, tok, jnp.int32(0))
+    logits2, dec_caches = step(params, dec_caches, tok, jnp.int32(1))
+    assert logits1.shape == (2, 1, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits1)) and jnp.all(jnp.isfinite(logits2))
+
+
+def test_param_counts_match_assignment_scale():
+    """Analytic param counts are in the ballpark the arch names claim."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        "deepseek-v2-236b": (1.9e11, 2.8e11),
+        "granite-20b": (1.5e10, 2.5e10),
+        "nemotron-4-340b": (3.0e11, 3.8e11),
+        "qwen3-32b": (2.7e10, 3.9e10),
+        "minicpm3-4b": (3.0e9, 5.0e9),
+        "llava-next-34b": (2.8e10, 4.0e10),
+        "xlstm-125m": (0.8e8, 2.2e8),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = ARCHS[name].param_count()
+        assert lo <= n <= hi, f"{name}: {n:.3e} not in [{lo:.1e}, {hi:.1e}]"
+
+
+def test_moe_active_params():
+    cfg = ARCHS["kimi-k2-1t-a32b"]
+    active = cfg.active_param_count()
+    assert 2.0e10 <= active <= 4.5e10  # ~32B active
+
+
+def test_mla_decode_absorbed_equals_materialized():
+    """The absorbed (latent) decode path must match materialized K/V."""
+    cfg = _reduced("deepseek-v2-236b")
+    cfg_m = dataclasses.replace(cfg, decode_absorb=False)
+    params = api.init_fn(cfg)(jax.random.PRNGKey(1))
+    caches_a = api.init_caches(cfg, 2, 16)
+    caches_m = api.init_caches(cfg_m, 2, 16)
+    tok = jnp.ones((2, 1), jnp.int32)
+    la, _ = api.decode_fn(cfg)(params, caches_a, tok, jnp.int32(0))
+    lm, _ = api.decode_fn(cfg_m)(params, caches_m, tok, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(la, np.float32),
+                               np.asarray(lm, np.float32), atol=2e-2)
+
+
+def test_decode_matches_prefill_logits():
+    """Greedy-path consistency: decoding token t reproduces prefill logits."""
+    cfg = _reduced("qwen3-32b")
+    params = api.init_fn(cfg)(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    logits_p, _ = api.prefill_fn(cfg)(params, {"tokens": toks})
+    # decode token-by-token
+    caches = api.init_caches(cfg, 1, 16)
+    step = jax.jit(api.decode_fn(cfg))
+    out = None
+    for t in range(8):
+        out, caches = step(params, caches, toks[:, t : t + 1], jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0], np.float32),
+        np.asarray(logits_p[:, 0], np.float32), atol=2e-2)

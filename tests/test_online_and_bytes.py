@@ -1,0 +1,107 @@
+"""Tests for the online multi-workload allocator and byte-complexity models."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ParameterServerModel,
+    WordCountModel,
+    all_blue,
+    all_red,
+    byte_complexity,
+    bt,
+    online_allocate,
+    phi,
+    soar,
+    workload_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    t = bt(32)
+    return t, workload_stream(t, 8, seed=0)
+
+
+def test_online_capacity_respected(small_net):
+    t, ws = small_net
+    res = online_allocate(t, ws, k=4, capacity=2, strategy="soar")
+    used = np.zeros(t.n, dtype=np.int64)
+    for p in res.picks:
+        used += p.astype(np.int64)
+        assert p.sum() <= 4
+    assert np.all(used <= 2)
+    assert np.all(res.residual_capacity == 2 - used)
+
+
+def test_online_soar_beats_baselines_on_average(small_net):
+    t, ws = small_net
+    totals = {}
+    for s in ("soar", "top", "max", "level", "random"):
+        res = online_allocate(t, ws, k=4, capacity=2, strategy=s)
+        totals[s] = res.costs.sum()
+    # SOAR is optimal per workload given residual availability
+    assert totals["soar"] <= min(v for k_, v in totals.items() if k_ != "soar") + 1e-9
+
+
+def test_online_unbounded_capacity_is_per_workload_optimal(small_net):
+    """Sec 5.2: with unbounded capacity SOAR stays optimal even online."""
+    t, ws = small_net
+    res = online_allocate(t, ws, k=4, capacity=len(ws), strategy="soar")
+    for load, cost in zip(ws, res.costs):
+        assert abs(cost - soar(t, load, 4).cost) < 1e-9
+
+
+def test_online_saturation_tends_to_all_red(small_net):
+    """With tiny capacity and many workloads, late workloads get no aggregation."""
+    t, _ = small_net
+    ws = workload_stream(t, 40, seed=1)
+    res = online_allocate(t, ws, k=8, capacity=1, strategy="soar")
+    # late normalized ratio approaches 1 (all-red)
+    assert res.normalized[-1] > res.normalized[4]
+    assert res.costs[-1] == pytest.approx(res.red_costs[-1])
+
+
+# ---------------------------------------------------------------------------
+# Byte complexity
+# ---------------------------------------------------------------------------
+
+def test_ps_model_sizes():
+    ps = ParameterServerModel(features=10_000, dropout=0.5, bytes_per_kv=1)
+    assert ps.size(1) == pytest.approx(5000.0)
+    assert ps.size(2) == pytest.approx(7500.0)
+    # union saturates at the full feature space
+    assert ps.size(50) == pytest.approx(10_000.0, rel=1e-6)
+
+
+def test_wc_model_monotone_sublinear():
+    wc = WordCountModel(total_words=100_000, vocab=5_000, n_servers=100,
+                        bytes_per_kv=1)
+    s1, s2, s4 = wc.size(1), wc.size(2), wc.size(4)
+    assert s1 < s2 < s4          # unions grow
+    assert s2 < 2 * s1           # but sub-additively (shared hot words)
+    assert s4 <= 5_000           # bounded by vocab
+
+
+def test_byte_complexity_red_vs_blue():
+    t = bt(16)
+    load = np.zeros(t.n, dtype=np.int64)
+    load[t.leaves] = 4
+    ps = ParameterServerModel()
+    red = byte_complexity(t, load, all_red(t), ps.size)
+    blue = byte_complexity(t, load, all_blue(t), ps.size)
+    assert blue < red
+    # all-red bytes = sum over servers of size(1) * path length (rho=1)
+    depth_cost = sum((t.depth[v] + 1) * load[v] for v in t.leaves)
+    assert red == pytest.approx(ps.size(1) * depth_cost)
+
+
+def test_byte_complexity_soar_between_extremes():
+    t = bt(64)
+    rng = np.random.default_rng(0)
+    load = np.zeros(t.n, dtype=np.int64)
+    load[t.leaves] = rng.integers(1, 10, size=len(t.leaves))
+    wc = WordCountModel(total_words=200_000, vocab=10_000, n_servers=200)
+    res = soar(t, load, 6)
+    b = byte_complexity(t, load, res.blue, wc.size)
+    assert byte_complexity(t, load, all_blue(t), wc.size) <= b + 1e-6
+    assert b <= byte_complexity(t, load, all_red(t), wc.size) + 1e-6

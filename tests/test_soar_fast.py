@@ -1,0 +1,75 @@
+"""Equivalence of the vectorized / capped gathers with the reference DP."""
+import numpy as np
+import pytest
+
+from repro.core.brute import brute_force
+from repro.core.reduce import phi
+from repro.core.soar import soar, soar_gather
+from repro.core.soar_fast import soar_fast, soar_gather_vectorized
+from repro.core.tree import bt, random_tree, rpa, sample_load
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fast_equals_reference_random(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 24))
+    t = random_tree(n, seed=seed)
+    load = rng.integers(0, 7, size=n)
+    k = int(rng.integers(0, 6))
+    avail = rng.random(n) < 0.7
+    ref = soar(t, load, k, avail=avail)
+    fast = soar_fast(t, load, k, avail=avail)
+    np.testing.assert_allclose(fast.cost, ref.cost, rtol=1e-12)
+    np.testing.assert_allclose(phi(t, load, fast.blue), ref.cost, rtol=1e-12)
+
+
+@pytest.mark.parametrize("scheme", ["constant", "linear", "exponential"])
+def test_fast_bt64(scheme):
+    t = bt(64, scheme)
+    load = sample_load(t, "power-law", seed=3)
+    for k in (0, 1, 4, 9):
+        ref = soar(t, load, k)
+        fast = soar_fast(t, load, k)
+        np.testing.assert_allclose(fast.cost, ref.cost, rtol=1e-12)
+
+
+def test_fast_scale_free():
+    t = rpa(128, seed=5)
+    load = sample_load(t, "ones", seed=0, leaves_only=False)
+    for k in (1, 4, 8):
+        ref = soar(t, load, k)
+        fast = soar_fast(t, load, k)
+        np.testing.assert_allclose(fast.cost, ref.cost, rtol=1e-12)
+
+
+def test_capped_tables_match_uncapped():
+    t = bt(32, "linear")
+    load = sample_load(t, "uniform", seed=1)
+    k = 6
+    Xc = soar_gather(t, load, k, cap=True)
+    Xu = soar_gather(t, load, k, cap=False)
+    for v in range(t.n):
+        np.testing.assert_allclose(Xc[v], Xu[v], rtol=1e-12)
+
+
+def test_vectorized_tables_match_reference():
+    t = bt(16)
+    load = sample_load(t, "power-law", seed=2)
+    k = 3
+    Xr = soar_gather(t, load, k, cap=False)
+    Xv = soar_gather_vectorized(t, load, k)
+    for v in range(t.n):
+        nl = t.depth[v] + 2
+        np.testing.assert_allclose(Xv[v][:nl], Xr[v], rtol=1e-12)
+
+
+def test_fast_vs_brute_small():
+    rng = np.random.default_rng(42)
+    for seed in range(4):
+        n = int(rng.integers(3, 9))
+        t = random_tree(n, seed=100 + seed)
+        load = rng.integers(0, 6, size=n)
+        k = int(rng.integers(0, 3))
+        _, want = brute_force(t, load, k)
+        got = soar_fast(t, load, k)
+        np.testing.assert_allclose(got.cost, want, rtol=1e-12)

@@ -1,0 +1,80 @@
+"""Optimality of SOAR (Theorem 4.1): exhaustive comparison vs brute force."""
+import numpy as np
+import pytest
+
+from repro.core.brute import brute_force
+from repro.core.reduce import phi
+from repro.core.soar import soar
+from repro.core.tree import DEST, Tree, bt, random_tree, sample_load, with_rates
+
+
+def _check(t, load, k, avail=None):
+    _, want = brute_force(t, load, k, avail=avail)
+    res = soar(t, load, k, avail=avail)
+    got_sim = phi(t, load, res.blue)
+    assert res.blue.sum() <= k
+    if avail is not None:
+        assert not np.any(res.blue & ~np.asarray(avail, bool))
+    np.testing.assert_allclose(res.cost, want, rtol=1e-12)
+    np.testing.assert_allclose(got_sim, want, rtol=1e-12)
+
+
+@pytest.mark.parametrize("k", [0, 1, 2, 3, 7])
+@pytest.mark.parametrize("scheme", ["constant", "linear", "exponential"])
+def test_bt8_all_k_all_rates(k, scheme):
+    t = bt(8, scheme)
+    load = sample_load(t, "power-law", seed=k)
+    _check(t, load, k)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_trees_random_rates(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 10))
+    t = random_tree(n, seed=seed)
+    load = rng.integers(0, 8, size=n)  # loads anywhere incl. internal, zeros
+    k = int(rng.integers(0, 4))
+    _check(t, load, k)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_restricted_availability(seed):
+    rng = np.random.default_rng(100 + seed)
+    t = bt(16)
+    load = sample_load(t, "uniform", seed=seed)
+    avail = rng.random(t.n) < 0.5
+    _check(t, load, 2, avail=avail)
+
+
+def test_path_graph_chain_dependencies():
+    """Paths stress the sequence-of-red-nodes long-range effect (Sec. 4)."""
+    n = 7
+    parent = np.arange(-1, n - 1, dtype=np.int32)  # 0 <- 1 <- 2 ...
+    t = Tree(parent, np.linspace(0.3, 2.0, n))
+    load = np.array([0, 3, 0, 5, 0, 2, 4])
+    for k in range(4):
+        _check(t, load, k)
+
+
+def test_star_graph():
+    n = 9
+    parent = np.full(n, 0, dtype=np.int32)
+    parent[0] = DEST
+    t = Tree(parent, np.linspace(0.5, 1.5, n))
+    load = np.arange(n)
+    for k in range(3):
+        _check(t, load, k)
+
+
+def test_zero_load_subtree_sends_nothing():
+    # A blue node over an empty subtree must not be charged a message.
+    parent = np.array([DEST, 0, 0, 1, 1])
+    t = Tree(parent, np.ones(5))
+    load = np.array([0, 0, 5, 0, 0])  # left subtree fully empty
+    _check(t, load, 2)
+
+
+def test_larger_instance_vs_brute():
+    t = bt(16, "linear")
+    load = sample_load(t, "power-law", seed=7)
+    _check(t, load, 3)

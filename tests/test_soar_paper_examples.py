@@ -1,0 +1,72 @@
+"""Worked examples from the paper (Figs. 1, 2, 3) as exact regression tests."""
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.reduce import all_blue, all_red, mask_from_set, phi, phi_barrier
+from repro.core.soar import soar
+from repro.core.tree import DEST, Tree
+
+
+def fig2_tree():
+    """BT over 7 switches, unit rates; leaf loads (2, 6, 5, 4)."""
+    parent = np.array([DEST, 0, 0, 1, 1, 2, 2])
+    t = Tree(parent, np.ones(7))
+    load = np.zeros(7, dtype=np.int64)
+    load[[3, 4, 5, 6]] = [2, 6, 5, 4]
+    return t, load
+
+
+def test_fig2_strategy_costs():
+    t, load = fig2_tree()
+    # Subfigure captions: Top=27, Max=24, Level=21, SOAR(optimal)=20, k=2.
+    assert phi(t, load, baselines.top(t, load, 2)) == 27
+    assert phi(t, load, baselines.max_load(t, load, 2)) == 24
+    assert phi(t, load, baselines.level(t, load, 2)) == 21
+    res = soar(t, load, 2)
+    assert res.cost == 20
+    assert phi(t, load, res.blue) == 20
+    assert res.blue.sum() <= 2
+
+
+def test_fig3_increasing_k():
+    t, load = fig2_tree()
+    # Fig. 3: optimal costs 35, 20, 15, 11 for k = 1, 2, 3, 4.
+    for k, want in [(1, 35), (2, 20), (3, 15), (4, 11)]:
+        res = soar(t, load, k)
+        assert res.cost == want, (k, res.cost)
+        assert phi(t, load, res.blue) == want
+
+    # k=2 and k=3 optima are stated to be unique; check the k=2 one matches
+    # the Eq. (3) illustration: U = {load-6 leaf, right mid switch}.
+    res2 = soar(t, load, 2)
+    assert set(np.nonzero(res2.blue)[0]) == {4, 2}
+
+
+def test_fig2_k0_all_red_and_all_blue():
+    t, load = fig2_tree()
+    # all-red: leaves (17) + mids (17) + root (17) = 51
+    assert phi(t, load, all_red(t)) == 51
+    # all-blue: 1 message per edge = 7
+    assert phi(t, load, all_blue(t)) == 7
+    assert soar(t, load, 0).cost == 51
+
+
+def test_eq3_barrier_equivalence_on_example():
+    t, load = fig2_tree()
+    U = mask_from_set(t, [4, 2])
+    assert phi(t, load, U) == 20
+    assert phi_barrier(t, load, U) == 20
+
+
+def test_fig1_six_server_example():
+    """Fig. 1: all-red = 14 messages, all-blue = 5 (number of tree edges)."""
+    # Destination d <- root r; r has two subtrees; 6 servers total, 5 switches.
+    # The figure's exact topology isn't fully specified; we use a 5-switch
+    # tree where the all-red utilization is 14 and all-blue is 5:
+    #   r(0) -- s1(1), s2(2); s1 -- s3(3), s4(4); loads: s2=4, s3=1, s4=1.
+    parent = np.array([DEST, 0, 0, 1, 1])
+    t = Tree(parent, np.ones(5))
+    load = np.array([0, 0, 4, 1, 1])
+    assert phi(t, load, all_red(t)) == 14
+    assert phi(t, load, all_blue(t)) == 5
