@@ -2,8 +2,9 @@
 
 Paper: serial SOAR-Gather seconds-to-minutes for n<=2048, k<=128; Color is
 ~1000x faster than Gather. We time the faithful implementation (the paper's
-serial loop structure) AND our vectorized level-synchronous rewrite — the
-beyond-paper hillclimb whose speedup is reported in EXPERIMENTS.md §Perf.
+serial loop structure), our vectorized level-synchronous rewrite, AND the
+batched JAX engine (`repro.engine`) amortized over ENGINE_B same-shape
+instances — the multi-tenant serving configuration.
 """
 from __future__ import annotations
 
@@ -14,12 +15,15 @@ import numpy as np
 from repro.core import bt, sample_load
 from repro.core.soar import soar_color, soar_gather
 from repro.core.soar_fast import soar_gather_vectorized
+from repro.engine import solve_forest
+from repro.core.forest import build_forest
 
 from .common import fmt_table, write_csv
 
 SIZES = (256, 512, 1024, 2048)
 KS = (4, 8, 16, 32, 64, 128)
 REPS = 3
+ENGINE_B = 16          # engine batch width for the amortized column
 
 
 def _time(fn, reps: int) -> float:
@@ -32,11 +36,13 @@ def _time(fn, reps: int) -> float:
 
 
 def run(sizes=SIZES, ks=KS, reps: int = REPS, quiet: bool = False,
-        faithful_limit: int = 2048):
+        faithful_limit: int = 2048, engine_b: int = ENGINE_B):
     rows = []
     for n in sizes:
         t = bt(n, "constant")
         L = sample_load(t, "power-law", seed=0)
+        loads = [sample_load(t, "power-law", seed=s) for s in range(engine_b)]
+        forest = build_forest([t] * engine_b, loads)
         for k in ks:
             # the faithful O(n h k^2) loop gets slow; cap its largest cells
             run_faithful = n * k * k <= faithful_limit * 128 * 128
@@ -46,13 +52,16 @@ def run(sizes=SIZES, ks=KS, reps: int = REPS, quiet: bool = False,
             X_all = soar_gather_vectorized(t, L, k)
             X = [X_all[v] for v in range(t.n)]
             t_color = _time(lambda: soar_color(t, L, k, X), reps)
-            rows.append([n, k, t_gather, t_fast, t_color,
-                         (t_gather / t_fast) if run_faithful else float("nan")])
+            solve_forest(forest, k)          # compile once, then steady-state
+            t_engine = _time(lambda: solve_forest(forest, k), reps) / engine_b
+            rows.append([n, k, t_gather, t_fast, t_color, t_engine,
+                         (t_gather / t_fast) if run_faithful else float("nan"),
+                         (t_fast + t_color) / t_engine])
     header = ["n", "k", "gather_faithful_s", "gather_fast_s", "color_s",
-              "speedup"]
+              "engine_per_inst_s", "speedup_fast", "speedup_engine"]
     write_csv("fig9_runtime.csv", header, rows)
     # paper claim: Color runs orders of magnitude faster than Gather
-    for n, k, tg, tf, tc, sp in rows:
+    for n, k, tg, tf, tc, te, sf, se in rows:
         if not np.isnan(tg):
             assert tc < tg, (n, k, tc, tg)
     if not quiet:

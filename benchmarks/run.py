@@ -11,9 +11,9 @@ import argparse
 import sys
 import time
 
-from . import (beyond_bottleneck, beyond_budget, fig6_strategies,
-               fig7_online, fig8_usecases, fig9_runtime, fig10_scaling,
-               fig11_scalefree, paper_claims)
+from . import (beyond_bottleneck, beyond_budget, engine_throughput,
+               fig6_strategies, fig7_online, fig8_usecases, fig9_runtime,
+               fig10_scaling, fig11_scalefree, paper_claims)
 
 BENCHES = [
     ("paper_claims (Figs 1-3 + brute-force optimality)", paper_claims.run, {}),
@@ -23,6 +23,8 @@ BENCHES = [
     ("fig9_runtime", fig9_runtime.run, {}),
     ("fig10_scaling", fig10_scaling.run, {}),
     ("fig11_scalefree", fig11_scalefree.run, {}),
+    ("engine_throughput (batched vs serial placement)",
+     engine_throughput.run, {}),
     ("beyond_bottleneck (paper §8 conjecture)", beyond_bottleneck.run, {}),
     ("beyond_budget (paper §8 open problem 2)", beyond_budget.run, {}),
 ]
@@ -31,9 +33,11 @@ FAST_OVERRIDES = {
     "fig6_strategies": dict(reps=3),
     "fig7_online": dict(reps=2),
     "fig8_usecases": dict(reps=2),
-    "fig9_runtime": dict(reps=1, sizes=(256, 512, 1024), ks=(4, 16, 64)),
+    "fig9_runtime": dict(reps=1, sizes=(256, 512, 1024), ks=(4, 16, 64),
+                         engine_b=8),
     "fig10_scaling": dict(reps=1, sizes=(256, 512, 1024)),
     "fig11_scalefree": dict(reps=2, sizes=(256, 512, 1024)),
+    "engine_throughput": dict(reps=2, batches=(8, 64)),
 }
 
 

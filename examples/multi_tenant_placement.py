@@ -1,14 +1,21 @@
 """Multi-tenant NaaS scenario (paper Sec. 5.2): workloads arrive online,
 each gets at most k aggregation switches, and every switch has a bounded
-aggregation capacity a(s). Compares SOAR against the contending strategies
-and shows the capacity-exhaustion effect the paper reports.
+aggregation capacity a(s). Compares SOAR against the contending strategies,
+shows the capacity-exhaustion effect the paper reports, and demonstrates
+the batched placement engine: all tenants planned in ONE level-synchronous
+JAX solve (`repro.engine.solve_batch`) instead of a serial per-tenant loop.
 
-Run:  PYTHONPATH=src python examples/multi_tenant_placement.py
+Run:  python examples/multi_tenant_placement.py
+      (or PYTHONPATH=src python examples/multi_tenant_placement.py from a
+       source checkout without `pip install -e .`)
 """
+import time
+
 import numpy as np
 
-from repro.core import bt
+from repro.core import bt, phi, all_red
 from repro.core.online import online_allocate, workload_stream
+from repro.engine import solve_batch
 
 N_TOTAL = 256      # BT(256) datacenter tree
 K = 16             # per-workload blue budget
@@ -18,8 +25,26 @@ N_WORKLOADS = 32
 t = bt(N_TOTAL, "linear")
 workloads = workload_stream(t, N_WORKLOADS, seed=0)
 
-print(f"BT({N_TOTAL}), linear rates, {N_WORKLOADS} workloads, "
-      f"k={K}, capacity={CAPACITY}\n")
+# ---------------------------------------------------------------------------
+# Batched planning pass: every tenant solved at once, capacity-unconstrained.
+# This is the engine's bread and butter — one compiled level sweep places
+# the whole tenant fleet and prices each tenant's ideal (uncontended) cost.
+# ---------------------------------------------------------------------------
+solve_batch([t] * N_WORKLOADS, workloads, K)            # warm the jit cache
+t0 = time.perf_counter()
+batch = solve_batch([t] * N_WORKLOADS, workloads, K)
+dt = time.perf_counter() - t0
+red = np.asarray([phi(t, L, all_red(t)) for L in workloads])
+print(f"BT({N_TOTAL}), linear rates, {N_WORKLOADS} tenants, k={K}, "
+      f"capacity={CAPACITY}\n")
+print(f"batched engine: {N_WORKLOADS} tenants placed in {dt * 1e3:.1f} ms "
+      f"({N_WORKLOADS / dt:.0f} instances/sec)")
+print(f"uncontended utilization vs all-red: "
+      f"{batch.costs.sum() / red.sum():.4f}\n")
+
+# ---------------------------------------------------------------------------
+# Online capacity-constrained admission (the paper's Fig. 7 setting).
+# ---------------------------------------------------------------------------
 print(f"{'strategy':<10} {'norm. utilization':<18} {'switches exhausted'}")
 for strategy in ("soar", "top", "max", "level", "random"):
     res = online_allocate(t, workloads, K, CAPACITY, strategy=strategy)
@@ -32,4 +57,7 @@ for i in (0, 7, 15, 23, 31):
     print(f"  after workload {i + 1:>2}: {res.normalized[i]:.4f}")
 print("\nAs capacity depletes, later workloads find fewer available"
       "\nswitches and the ratio drifts towards all-red (= 1.0) — the"
-      "\npaper's Fig. 7 effect.")
+      "\npaper's Fig. 7 effect. The contention penalty vs the batched"
+      "\nuncontended plan above is the price of bounded capacity:"
+      f"\n  online {res.normalized[-1]:.4f}  vs  uncontended "
+      f"{batch.costs.sum() / red.sum():.4f}")

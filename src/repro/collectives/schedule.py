@@ -130,3 +130,30 @@ def plan(topo: ClusterTopology, k: int, avail: np.ndarray | None = None,
         blue = baselines.STRATEGIES[strategy](
             topo.tree, topo.load, k, avail=avail)
     return blue, build_program(topo, blue)
+
+
+def plan_batch(topos: list[ClusterTopology], k: int,
+               avails: list[np.ndarray | None] | None = None,
+               strategy: str = "soar"):
+    """Batched planning: place B scenarios/workloads in one engine solve.
+
+    For ``strategy="soar"`` all instances run through
+    :func:`repro.engine.solve_batch` (one compiled level sweep — same-shape
+    scenario fleets amortize to a single executable); other strategies fall
+    back to the serial per-instance baselines. Returns ``[(blue, program)]``
+    in input order.
+    """
+    if not topos:
+        return []
+    avails = [None] * len(topos) if avails is None else list(avails)
+    if strategy == "soar":
+        from ..engine import solve_batch
+        res = solve_batch([tp.tree for tp in topos],
+                          [tp.load for tp in topos], k, avails)
+        blues = [res.blue_of(b) for b in range(len(topos))]
+    else:
+        fn = baselines.STRATEGIES[strategy]
+        blues = [fn(tp.tree, tp.load, k, avail=av)
+                 for tp, av in zip(topos, avails)]
+    return [(blue, build_program(tp, blue))
+            for tp, blue in zip(topos, blues)]

@@ -2,6 +2,7 @@
 from .baselines import STRATEGIES, level, max_degree, max_load, random_k, top
 from .brute import brute_force
 from .bytes_model import ParameterServerModel, WordCountModel, byte_complexity
+from .forest import Forest, build_forest
 from .online import OnlineResult, online_allocate, workload_stream
 from .reduce import all_blue, all_red, mask_from_set, messages_up, phi, phi_barrier
 from .soar import SoarResult, minplus, soar, soar_color, soar_gather
@@ -13,6 +14,7 @@ __all__ = [
     "soar", "soar_fast", "soar_gather", "soar_gather_vectorized", "soar_color",
     "SoarResult", "minplus", "minplus_batch",
     "phi", "phi_barrier", "messages_up", "all_red", "all_blue", "mask_from_set",
+    "Forest", "build_forest",
     "brute_force", "STRATEGIES", "top", "max_load", "max_degree", "level",
     "random_k", "online_allocate", "workload_stream", "OnlineResult",
     "byte_complexity", "WordCountModel", "ParameterServerModel",

@@ -1,0 +1,251 @@
+"""Padded batch representation of many phi-BIC instances (a *forest*).
+
+The multi-tenant setting (paper Sec. 5.2) solves one placement instance per
+workload; a production engine solves B of them at once. ``Forest`` stacks B
+trees of varying shape into dense ``(B, n_max)`` node-indexed arrays with
+validity masks, plus a **level-packed slot layout** that the batched JAX
+gather in ``repro.engine`` consumes:
+
+  * slots are grouped by depth — every level is one contiguous block, so
+    the level-synchronous sweep writes its results with *static* slice
+    updates instead of scatters (the difference between a fused memcpy and
+    a general scatter op on CPU/TPU);
+  * within a level block, internal nodes come first and leaves last: the
+    expensive child-fold (the mCost tropical convolution) only runs over
+    the internal sub-block, leaves are pure elementwise;
+  * missing children point at an *identity* slot (index ``n_slots``) whose
+    table is all zeros — for monotone (at-most-k) DP tables the all-zeros
+    vector is a min-plus identity, so folding a missing child is a no-op;
+  * padded slots inside a block fold only identities and carry zero
+    load / BIG rho, so their garbage stays finite and is never read.
+
+Everything here is host-side numpy. Per-tree structure (children matrix,
+depth buckets, rho-up table) is cached on the tree object's identity, so a
+fleet reusing one topology — the common serving pattern — pays the packing
+cost once. Batches of *similar* shapes share one compiled executable in
+the engine (the jit key is the packed layout + ``k``), so group instances
+by size when throughput matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Sequence
+
+import numpy as np
+
+from .tree import DEST, Tree
+
+
+@dataclasses.dataclass(frozen=True)
+class _TreeStruct:
+    """Load-independent per-tree arrays (cached by tree identity)."""
+
+    max_c: int
+    kid: np.ndarray                 # (n, max(max_c, 1)) int32; -1 sentinel
+    rho_up: np.ndarray              # (n, height+2) float64; inf invalid
+    internal: tuple[np.ndarray, ...]  # node ids with children, per depth
+    leaf: tuple[np.ndarray, ...]      # leaf node ids, per depth
+
+
+_STRUCT_CACHE: dict[int, tuple] = {}
+
+
+def _tree_struct(t: Tree) -> _TreeStruct:
+    key = id(t)
+    hit = _STRUCT_CACHE.get(key)
+    if hit is not None and hit[0]() is t:
+        return hit[1]
+    n, h = t.n, t.height
+    max_c = max((len(t.children[v]) for v in range(n)), default=0)
+    kid = np.full((n, max(max_c, 1)), -1, np.int32)
+    internal: list[list[int]] = [[] for _ in range(h + 1)]
+    leaf: list[list[int]] = [[] for _ in range(h + 1)]
+    for v in range(n):
+        ch = t.children[v]
+        if ch:
+            kid[v, : len(ch)] = ch
+            internal[t.depth[v]].append(v)
+        else:
+            leaf[t.depth[v]].append(v)
+    s = _TreeStruct(
+        max_c=max_c, kid=kid, rho_up=t.rho_up_table(),
+        internal=tuple(np.asarray(l, np.int32) for l in internal),
+        leaf=tuple(np.asarray(l, np.int32) for l in leaf))
+    _STRUCT_CACHE[key] = (weakref.ref(t, lambda _, k=key:
+                                      _STRUCT_CACHE.pop(k, None)), s)
+    return s
+
+
+@dataclasses.dataclass(frozen=True)
+class Forest:
+    """B phi-BIC instances padded into dense arrays (see module docstring)."""
+
+    # -- node-indexed (original per-tree node ids, padded to n_max) ----------
+    trees: tuple[Tree, ...]        # originals (for unpacking / debugging)
+    parent: np.ndarray             # (B, n_max) int32; -1 root, -2 padding
+    rho: np.ndarray                # (B, n_max) float64; 1.0 padding
+    load: np.ndarray               # (B, n_max) int64; 0 padding
+    avail: np.ndarray              # (B, n_max) bool; False padding
+    mask: np.ndarray               # (B, n_max) bool; True at real nodes
+    depth: np.ndarray              # (B, n_max) int32; -1 padding
+    root: np.ndarray               # (B,) int32
+    n: np.ndarray                  # (B,) int64 — real node counts
+    height: np.ndarray             # (B,) int32
+    kid: np.ndarray                # (B, n_max, max_c) int32; sentinel n_max
+    rho_up: np.ndarray             # (B, n_max, h_max+2) float64; inf invalid
+    send: np.ndarray               # (B, n_max) int64; 1 iff subtree load > 0
+    levels: tuple[np.ndarray, ...]  # levels[d]: (B, W_d) int32 node ids at
+                                    # depth d, padded with n_max
+    # -- level-packed (slot-indexed) layout for the batched gather ----------
+    slot_of: np.ndarray            # (B, n_max) int32 node -> slot; n_slots pad
+    slot_node: np.ndarray          # (B, n_slots) int32 slot -> node; -1 pad
+    pk_kid: np.ndarray             # (B, n_slots, max_c) int32 child slots;
+                                   #   sentinel n_slots (the identity slot)
+    pk_load: np.ndarray            # (B, n_slots) int64
+    pk_send: np.ndarray            # (B, n_slots) int64
+    pk_avail: np.ndarray           # (B, n_slots) bool
+    pk_rho_up: np.ndarray          # (B, n_slots, h_max+2) float64; inf pad
+    lvl_off: tuple[int, ...]       # level d block = slots [lvl_off[d],
+    lvl_width: tuple[int, ...]     #   lvl_off[d] + lvl_width[d])
+    lvl_internal: tuple[int, ...]  # first lvl_internal[d] slots of the block
+                                   #   are internal nodes, the rest leaves
+
+    @property
+    def batch(self) -> int:
+        return len(self.trees)
+
+    @property
+    def n_max(self) -> int:
+        return int(self.parent.shape[1])
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.slot_node.shape[1])
+
+    @property
+    def h_max(self) -> int:
+        return int(self.rho_up.shape[2] - 2)
+
+    @property
+    def max_children(self) -> int:
+        return int(self.kid.shape[2])
+
+
+def build_forest(
+    trees: Sequence[Tree],
+    loads: Sequence[np.ndarray],
+    avail: Sequence[np.ndarray] | None = None,
+) -> Forest:
+    """Stack B (tree, load[, avail]) instances into one padded Forest."""
+    if len(trees) == 0:
+        raise ValueError("empty forest")
+    if len(loads) != len(trees):
+        raise ValueError(f"{len(loads)} loads for {len(trees)} trees")
+    if avail is not None and len(avail) != len(trees):
+        raise ValueError(f"{len(avail)} avail masks for {len(trees)} trees")
+    B = len(trees)
+    structs = [_tree_struct(t) for t in trees]
+    n_max = max(t.n for t in trees)
+    h_max = max(t.height for t in trees)
+    H2 = h_max + 2
+    max_c = max(max(s.max_c for s in structs), 1)
+
+    parent = np.full((B, n_max), -2, np.int32)
+    rho = np.ones((B, n_max), np.float64)
+    load_a = np.zeros((B, n_max), np.int64)
+    avail_a = np.zeros((B, n_max), bool)
+    mask = np.zeros((B, n_max), bool)
+    depth = np.full((B, n_max), -1, np.int32)
+    root = np.zeros(B, np.int32)
+    nn = np.zeros(B, np.int64)
+    height = np.zeros(B, np.int32)
+    kid = np.full((B, n_max, max_c), n_max, np.int32)   # identity sentinel
+    rho_up = np.full((B, n_max, H2), np.inf, np.float64)
+
+    for b, (t, s) in enumerate(zip(trees, structs)):
+        n = t.n
+        L = np.asarray(loads[b], np.int64)
+        if L.shape != (n,):
+            raise ValueError(f"load {b} shape {L.shape} != ({n},)")
+        parent[b, :n] = t.parent
+        rho[b, :n] = t.rho
+        load_a[b, :n] = L
+        avail_a[b, :n] = (np.ones(n, bool) if avail is None or avail[b] is None
+                          else np.asarray(avail[b], bool))
+        mask[b, :n] = True
+        depth[b, :n] = t.depth
+        root[b] = t.root
+        nn[b] = n
+        height[b] = t.height
+        mc = s.kid.shape[1]
+        kid[b, :n, :mc] = np.where(s.kid >= 0, s.kid, n_max)
+        rho_up[b, :n, : t.height + 2] = s.rho_up
+
+    levels = []
+    for d in range(h_max + 1):
+        W = max(max((len(s.internal[d]) + len(s.leaf[d])
+                     if d <= t.height else 0
+                     for t, s in zip(trees, structs)), default=0), 1)
+        lvl = np.full((B, W), n_max, np.int32)
+        for b, (t, s) in enumerate(zip(trees, structs)):
+            if d > t.height:
+                continue
+            ni = len(s.internal[d])
+            lvl[b, :ni] = s.internal[d]
+            lvl[b, ni : ni + len(s.leaf[d])] = s.leaf[d]
+        levels.append(lvl)
+
+    # send(v) = 1 iff subtree load positive: bottom-up level sweep, batched
+    sub = load_a.copy()
+    for d in range(h_max, 0, -1):
+        nd = levels[d]
+        bv, wv = np.nonzero(nd < n_max)
+        vv = nd[bv, wv]
+        np.add.at(sub, (bv, parent[bv, vv]), sub[bv, vv])
+    send = (sub > 0).astype(np.int64)
+
+    # ---- level-packed slot layout -----------------------------------------
+    lvl_off, lvl_width, lvl_internal = [], [], []
+    S = 0
+    for d in range(h_max + 1):
+        wi = max((len(s.internal[d]) for t, s in zip(trees, structs)
+                  if d <= t.height), default=0)
+        wl = max((len(s.leaf[d]) for t, s in zip(trees, structs)
+                  if d <= t.height), default=0)
+        lvl_off.append(S)
+        lvl_internal.append(wi)
+        lvl_width.append(wi + wl)
+        S += wi + wl
+    slot_of = np.full((B, n_max), S, np.int32)
+    slot_node = np.full((B, S), -1, np.int32)
+    for b, (t, s) in enumerate(zip(trees, structs)):
+        for d in range(t.height + 1):
+            o, wi = lvl_off[d], lvl_internal[d]
+            vi, vl = s.internal[d], s.leaf[d]
+            slot_of[b, vi] = o + np.arange(len(vi), dtype=np.int32)
+            slot_node[b, o : o + len(vi)] = vi
+            slot_of[b, vl] = o + wi + np.arange(len(vl), dtype=np.int32)
+            slot_node[b, o + wi : o + wi + len(vl)] = vl
+    real = slot_node >= 0
+    src = np.where(real, slot_node, 0)
+    bix = np.arange(B)[:, None]
+    pk_load = np.where(real, load_a[bix, src], 0)
+    pk_send = np.where(real, send[bix, src], 0)
+    pk_avail = np.where(real, avail_a[bix, src], False)
+    pk_rho_up = np.where(real[:, :, None], rho_up[bix, src], np.inf)
+    ch = kid[bix, src]                                  # (B, S, max_c)
+    ch_slot = np.where(
+        ch < n_max,
+        slot_of[bix[:, :, None], np.minimum(ch, n_max - 1)], S)
+    pk_kid = np.where(real[:, :, None], ch_slot, S).astype(np.int32)
+
+    return Forest(trees=tuple(trees), parent=parent, rho=rho, load=load_a,
+                  avail=avail_a, mask=mask, depth=depth, root=root, n=nn,
+                  height=height, kid=kid, rho_up=rho_up, send=send,
+                  levels=tuple(levels),
+                  slot_of=slot_of, slot_node=slot_node, pk_kid=pk_kid,
+                  pk_load=pk_load, pk_send=pk_send, pk_avail=pk_avail,
+                  pk_rho_up=pk_rho_up, lvl_off=tuple(lvl_off),
+                  lvl_width=tuple(lvl_width),
+                  lvl_internal=tuple(lvl_internal))

@@ -28,27 +28,7 @@ import dataclasses
 import numpy as np
 
 from .tree import DEST, Tree
-
-
-def minplus(A: np.ndarray, B: np.ndarray, out_w: int | None = None) -> np.ndarray:
-    """Row-wise min-plus convolution. A: (L, Wa), B: (L, Wb) -> (L, out_w).
-
-    Y[l, i] = min_{0<=j<=i} A[l, i-j] + B[l, j].
-
-    With monotone (at-most-budget) operands, truncating to ``out_w``
-    columns is exact — the subtree-budget cap optimization.
-    """
-    A = np.atleast_2d(A)
-    B = np.atleast_2d(B)
-    L, Wa = A.shape
-    Wb = B.shape[1]
-    W = (Wa + Wb - 1) if out_w is None else min(out_w, Wa + Wb - 1)
-    Y = np.full((L, W), np.inf)
-    for j in range(min(Wb, W)):
-        seg = min(Wa, W - j)
-        np.minimum(Y[:, j : j + seg], A[:, :seg] + B[:, j : j + 1],
-                   out=Y[:, j : j + seg])
-    return Y
+from .tropical import minplus  # noqa: F401  (re-exported: the DP's primitive)
 
 
 @dataclasses.dataclass

@@ -19,15 +19,7 @@ import numpy as np
 
 from .soar import SoarResult, soar_color
 from .tree import Tree
-
-
-def minplus_batch(A: np.ndarray, B: np.ndarray) -> np.ndarray:
-    """Batched min-plus convolution: (B, K) x (B, K) -> (B, K)."""
-    Bn, K = A.shape
-    Y = np.full((Bn, K), np.inf)
-    for j in range(K):
-        np.minimum(Y[:, j:], A[:, : K - j] + B[:, j : j + 1], out=Y[:, j:])
-    return Y
+from .tropical import minplus_batch  # noqa: F401  (re-exported batched primitive)
 
 
 def _levels(t: Tree) -> list[np.ndarray]:

@@ -113,17 +113,27 @@ class Tree:
         return float(self.pathrho[v] - (self.pathrho[a] if a != DEST else 0.0))
 
     def rho_up_table(self, max_ell: int | None = None) -> np.ndarray:
-        """Dense table R[v, ell] = rho(v, A_v^ell), inf where ell > depth[v]+1."""
+        """Dense table R[v, ell] = rho(v, A_v^ell), inf where ell > depth[v]+1.
+
+        Vectorized ancestor walk: hop ``ell`` adds the up-edge rho of every
+        node's current ancestor, all nodes at once (same per-node addition
+        order as the scalar walk, so results are bit-identical).
+        """
         h = self.height
         m = (h + 2) if max_ell is None else (max_ell + 1)
-        out = np.full((self.n, m), np.inf, dtype=np.float64)
+        n = self.n
+        out = np.full((n, m), np.inf, dtype=np.float64)
         out[:, 0] = 0.0
-        for v in range(self.n):
-            u, acc = v, 0.0
-            for ell in range(1, min(m - 1, self.depth[v] + 1) + 1):
-                acc += self.rho[u]
-                out[v, ell] = acc
-                u = int(self.parent[u])
+        cur = np.arange(n)              # A_v^{ell-1}
+        acc = np.zeros(n, dtype=np.float64)
+        for ell in range(1, m):
+            alive = cur != DEST
+            if not alive.any():
+                break
+            idx = np.where(alive, cur, 0)
+            acc = acc + self.rho[idx]
+            out[alive, ell] = acc[alive]
+            cur = np.where(alive, self.parent[idx], DEST)
         return out
 
     def subtree_sizes(self) -> np.ndarray:

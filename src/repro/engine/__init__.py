@@ -1,0 +1,11 @@
+"""Batched multi-tenant SOAR placement engine.
+
+``solve_batch(trees, loads, k, avail)`` solves B phi-BIC instances in one
+level-synchronous JAX sweep (see ``batched.py``); the serial per-instance
+solvers stay in ``repro.core``.
+"""
+from .batched import (BatchResult, color_batch, gather_batch, solve_batch,
+                      solve_forest)
+
+__all__ = ["BatchResult", "color_batch", "gather_batch", "solve_batch",
+           "solve_forest"]

@@ -1,0 +1,331 @@
+"""Batched multi-tenant SOAR placement engine (JAX).
+
+Solves B phi-BIC instances at once over the level-packed
+:class:`repro.core.forest.Forest` layout:
+
+  * **Gather** — a level-synchronous sweep (deepest level first) where all
+    nodes of a depth level, across *all* instances, are processed
+    together. The budget-split min over children (the mCost tropical
+    convolution of Algorithm 3) becomes one batched min-plus over every
+    (instance, node, ell) row of the level's *internal* sub-block,
+    dispatched to the Pallas TPU kernel in ``repro.kernels.minplus`` on
+    TPU and to a fused jnp shift-reduction elsewhere. Leaves are pure
+    elementwise. Because each level is a contiguous slot block, results
+    land via static slice updates — no scatter ops.
+  * **Color** — the traceback is orders of magnitude cheaper than the
+    gather (paper Sec. 5.4 / fig9) and runs on the host, but also level
+    synchronously: all nodes of a level, across all instances, replay
+    their budget split with vectorized numpy (see :func:`color_batch`).
+
+Numerics: the DP runs on a finite ``BIG`` sentinel instead of ``inf`` so
+that ``0 * BIG`` stays finite (padded slots would otherwise produce NaN
+via ``0 * inf``). Tables are float32 by default; instances whose rho
+values are exactly representable (dyadic rates — every paper topology and
+the fleet trees) reproduce the float64 reference *bit-exactly*; arbitrary
+rates match to float32 eps. Pass ``dtype=jnp.float64`` under
+``jax_enable_x64`` for exactness on arbitrary rates.
+
+The min-plus identity here is the all-zeros vector, not ``[0, inf, ...]``:
+DP tables are monotone non-increasing in the budget (at-most-k), and for
+monotone A, ``minplus(A, 0)[i] = min_{j<=i} A[i-j] = A[i]`` — so missing
+children (the identity slot) fold as no-ops while leaf and padded slots
+stay finite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.forest import Forest, build_forest
+from ..core.tree import Tree
+from ..core.tropical import minplus_batch
+
+BIG = 1e18  # finite +inf stand-in; exactly representable in float32
+
+
+def _minplus_fused(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused jnp min-plus convolution, (rows, K) x (rows, K) -> (rows, K).
+
+    The j-shift reduction of the Pallas kernel body, unrolled over the
+    (static) budget width so XLA fuses it into one elementwise loop — no
+    (rows, K, K) candidate tensor is ever materialized.
+    """
+    rows, k = a.shape
+    acc = a + b[:, :1]
+    for j in range(1, k):
+        shifted = jnp.concatenate(
+            [jnp.full((rows, j), BIG, a.dtype), a[:, : k - j]], axis=1)
+        acc = jnp.minimum(acc, shifted + b[:, j : j + 1])
+    return acc
+
+
+def _minplus_rows(a: jax.Array, b: jax.Array, use_pallas: bool,
+                  interpret: bool) -> jax.Array:
+    """Backend dispatch for the batched tropical convolution."""
+    if use_pallas:
+        from ..kernels.minplus.ops import minplus
+        return minplus(a, b, interpret=interpret)
+    return _minplus_fused(a, b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "k",
+                     "use_pallas", "interpret"))
+def _gather_packed(
+    pk_kid: jax.Array,     # (B, S, max_c) int32 child slots, sentinel S
+    pk_load: jax.Array,    # (B, S)
+    pk_send: jax.Array,    # (B, S)
+    pk_avail: jax.Array,   # (B, S) bool
+    pk_rho_up: jax.Array,  # (B, S, h_max+2), BIG at invalid ell
+    *,
+    lvl_off: tuple,
+    lvl_width: tuple,
+    lvl_internal: tuple,
+    k: int,
+    use_pallas: bool,
+    interpret: bool,
+) -> jax.Array:
+    """Level-synchronous batched SOAR-Gather over the packed slot layout.
+
+    Returns DP tables ``X[b, s, ell, i]`` of shape ``(B, S+1, h_max+2,
+    k+1)``; slot ``S`` is the all-zeros min-plus identity, rows beyond a
+    node's ``depth+1`` stay BIG, padded slots hold finite garbage that is
+    never read back.
+    """
+    B, S, max_c = pk_kid.shape
+    H2 = pk_rho_up.shape[2]
+    h_max = H2 - 2
+    K = k + 1
+    dt = pk_rho_up.dtype
+    loadf = pk_load.astype(dt)
+    sendf = pk_send.astype(dt)
+
+    X = jnp.full((B, S + 1, H2, K), BIG, dt)
+    X = X.at[:, S].set(0.0)                            # identity slot
+
+    for d in range(h_max, -1, -1):
+        o, W, Wi = lvl_off[d], lvl_width[d], lvl_internal[d]
+        nl = d + 2                                     # valid rows 0..d+1
+        rl = pk_rho_up[:, o : o + W, :nl, None]        # (B, W, nl, 1)
+        if Wi > 0:
+            # red chain: children see the barrier one hop further -> child
+            # row ell+1 aligns with row ell. Internal nodes only exist at
+            # d < h_max, so rows 1..nl+1 always fit in H2.
+            kidv = pk_kid[:, o : o + Wi]               # (B, Wi, max_c)
+            Xs = X[:, :, 1 : nl + 1, :]
+            c0 = kidv[:, :, 0]
+            acc_r = jnp.take_along_axis(Xs, c0[:, :, None, None], axis=1)
+            acc_b = jnp.take_along_axis(X[:, :, 1, :], c0[:, :, None], axis=1)
+            for m in range(1, max_c):
+                cm = kidv[:, :, m]
+                ch_r = jnp.take_along_axis(Xs, cm[:, :, None, None], axis=1)
+                ch_b = jnp.take_along_axis(X[:, :, 1, :], cm[:, :, None],
+                                           axis=1)
+                # one fused convolution over all (b, v, ell) + blue rows
+                a = jnp.concatenate([acc_r.reshape(-1, K),
+                                     acc_b.reshape(-1, K)])
+                b = jnp.concatenate([ch_r.reshape(-1, K),
+                                     ch_b.reshape(-1, K)])
+                y = _minplus_rows(a, b, use_pallas, interpret)
+                acc_r = y[: B * Wi * nl].reshape(B, Wi, nl, K)
+                acc_b = y[B * Wi * nl :].reshape(B, Wi, K)
+            rli = rl[:, :Wi]
+            red = acc_r + loadf[:, o : o + Wi, None, None] * rli
+            # blue: budget shifts by one (v spends a slot on itself)
+            blue = jnp.concatenate(
+                [jnp.full((B, Wi, nl, 1), BIG, dt),
+                 acc_b[:, :, None, :-1]
+                 + sendf[:, o : o + Wi, None, None] * rli], axis=-1)
+            blue = jnp.where(pk_avail[:, o : o + Wi, None, None], blue, BIG)
+            out = jnp.minimum(red, blue)
+            out = jax.lax.cummin(out, axis=3)          # at-most-k monotone
+            X = X.at[:, o : o + Wi, :nl, :].set(out)
+        if W - Wi > 0:
+            # leaves: X_v(l, 0) = L(v) rho; X_v(l, i>=1) also allows blue
+            lo = o + Wi
+            rll = rl[:, Wi:]
+            lr = loadf[:, lo : o + W, None, None] * rll    # (B, Wl, nl, 1)
+            sr = sendf[:, lo : o + W, None, None] * rll
+            rest = jnp.where(pk_avail[:, lo : o + W, None, None],
+                             jnp.minimum(lr, sr), lr)
+            out = jnp.concatenate(
+                [lr, jnp.broadcast_to(rest, (*rest.shape[:3], K - 1))],
+                axis=-1)
+            X = X.at[:, lo : o + W, :nl, :].set(out)
+    return X
+
+
+def _gather_device(f: Forest, k: int, dtype, use_pallas: bool,
+                   interpret: bool) -> jax.Array:
+    R = np.where(np.isfinite(f.pk_rho_up), f.pk_rho_up, BIG)
+    return _gather_packed(
+        jnp.asarray(f.pk_kid), jnp.asarray(f.pk_load),
+        jnp.asarray(f.pk_send), jnp.asarray(f.pk_avail),
+        jnp.asarray(R, dtype),
+        lvl_off=f.lvl_off, lvl_width=f.lvl_width,
+        lvl_internal=f.lvl_internal,
+        k=k, use_pallas=bool(use_pallas), interpret=bool(interpret))
+
+
+def _unpack_tables(f: Forest, X: jax.Array) -> np.ndarray:
+    """Slot-indexed device tables -> node-indexed host float64 tables."""
+    Xh = np.asarray(X, np.float64)                     # (B, S+1, H2, K)
+    # node v of instance b lives at slot slot_of[b, v]; padded nodes point
+    # at the identity slot, which is exactly the zero table color_batch
+    # expects at index n_max.
+    idx = np.concatenate(
+        [f.slot_of, np.full((f.batch, 1), f.n_slots, np.int32)], axis=1)
+    return Xh[np.arange(f.batch)[:, None], idx]
+
+
+def gather_batch(f: Forest, k: int, *, dtype=jnp.float32,
+                 use_pallas: bool = False,
+                 interpret: bool = False) -> np.ndarray:
+    """Batched SOAR-Gather; returns *node-indexed* DP tables.
+
+    Shape ``(B, n_max+1, h_max+2, k+1)`` float64 on host; index ``n_max``
+    is the all-zeros identity slot (what sentinel children point at).
+    """
+    return _unpack_tables(
+        f, _gather_device(f, k, dtype, use_pallas, interpret))
+
+
+def color_batch(f: Forest, X: np.ndarray, k: int) -> np.ndarray:
+    """Batched SOAR-Color: level-synchronous traceback over all instances.
+
+    ``X`` are the node-indexed gathered tables (host, float64). Replays
+    Algorithm 4's budget split with the exact tie-breaking of the serial
+    ``soar_color`` (blue iff strictly better; first minimizer of each
+    child split), vectorized over every node of a level across the batch.
+    """
+    B, n_max = f.mask.shape
+    K = k + 1
+    R = np.where(np.isfinite(f.rho_up), f.rho_up, BIG)
+    blue = np.zeros((B, n_max), bool)
+    budget_at = np.zeros((B, n_max), np.int64)   # budget i for T_v
+    ell_at = np.ones((B, n_max), np.int64)       # dist to closest blue anc/d
+    budget_at[np.arange(B), f.root] = k
+    jj = np.arange(K)[None, :]
+
+    for d, nd in enumerate(f.levels):
+        valid = nd < n_max                           # real nodes only
+        bv, wv = np.nonzero(valid)
+        if len(bv) == 0:
+            continue
+        vv = nd[bv, wv]
+        rows = len(vv)
+        ar = np.arange(rows)
+        i = budget_at[bv, vv]
+        ell = ell_at[bv, vv]
+        rl = R[bv, vv, ell]
+        kids = f.kid[bv, vv]                         # (rows, max_c)
+        # partial min-plus chains over children, red (row ell+1) and blue
+        # (row 1) variants; sentinel children hit the zero identity slot.
+        # Clip the red row: it only saturates for deepest-level leaves,
+        # whose children are all sentinel (zero at every row).
+        er = np.minimum(ell + 1, X.shape[2] - 1)
+        ch_r = np.empty((rows, f.max_children, K))
+        ch_b = np.empty((rows, f.max_children, K))
+        ch_r[:, 0] = X[bv, kids[:, 0], er]
+        ch_b[:, 0] = X[bv, kids[:, 0], 1]
+        for m in range(1, f.max_children):
+            ch_r[:, m] = minplus_batch(ch_r[:, m - 1], X[bv, kids[:, m], er])
+            ch_b[:, m] = minplus_batch(ch_b[:, m - 1], X[bv, kids[:, m], 1])
+        red_val = ch_r[ar, -1, i] + f.load[bv, vv] * rl
+        can_blue = f.avail[bv, vv] & (i >= 1)
+        blue_val = np.where(
+            can_blue,
+            ch_b[ar, -1, np.clip(i - 1, 0, K - 1)] + f.send[bv, vv] * rl,
+            np.inf)
+        isblue = blue_val < red_val                  # strict, as in serial
+        blue[bv, vv] = isblue
+        budget = i - isblue.astype(np.int64)
+        lc = np.where(isblue, 1, ell + 1)
+        lcc = np.minimum(lc, X.shape[2] - 1)         # saturates only for
+        chain = np.where(isblue[:, None, None], ch_b, ch_r)  # sentinel reads
+        # split the budget among children, last child first (mSplit replay)
+        for m in range(f.max_children - 1, 0, -1):
+            c = kids[:, m]
+            real = c < n_max
+            Xc = X[bv, c, lcc]                       # (rows, K)
+            prev = chain[:, m - 1]
+            feas = jj <= budget[:, None]
+            vals = prev[ar[:, None], np.clip(budget[:, None] - jj, 0, K - 1)]
+            vals = np.where(feas, vals + Xc, np.inf)
+            best_j = np.argmin(vals, axis=1)         # first minimizer
+            budget_at[bv[real], c[real]] = best_j[real]
+            ell_at[bv[real], c[real]] = lc[real]
+            budget = budget - np.where(real, best_j, 0)
+        c = kids[:, 0]
+        real = c < n_max
+        budget_at[bv[real], c[real]] = budget[real]
+        ell_at[bv[real], c[real]] = lc[real]
+    return blue
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Output of :func:`solve_batch` for B padded instances."""
+
+    blue: np.ndarray | None   # (B, n_max) bool, False at padding; None
+                              # in costs-only mode (color=False)
+    costs: np.ndarray         # (B,) float64 — optimal phi per instance
+    n: np.ndarray             # (B,) real node counts (mask key for blue)
+
+    def blue_of(self, b: int) -> np.ndarray:
+        """Unpadded blue mask of instance b."""
+        if self.blue is None:
+            raise ValueError("solve_batch ran with color=False")
+        return self.blue[b, : int(self.n[b])]
+
+
+def solve_forest(
+    f: Forest,
+    k: int,
+    *,
+    color: bool = True,
+    dtype=jnp.float32,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> BatchResult:
+    """:func:`solve_batch` for a pre-built Forest (amortizes packing)."""
+    if k < 0:
+        raise ValueError("budget k must be non-negative")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    X = _gather_device(f, k, dtype, use_pallas, interpret)
+    root_slot = f.slot_of[np.arange(f.batch), f.root]
+    if not color:
+        # costs-only planning mode: pull back B scalars, not the tables
+        roots = X[jnp.arange(f.batch), jnp.asarray(root_slot), 1, k]
+        return BatchResult(blue=None,
+                           costs=np.asarray(roots, np.float64),
+                           n=f.n.copy())
+    Xn = _unpack_tables(f, X)
+    costs = Xn[np.arange(f.batch), f.root, 1, k]
+    return BatchResult(blue=color_batch(f, Xn, k), costs=costs,
+                       n=f.n.copy())
+
+
+def solve_batch(
+    trees: Sequence[Tree],
+    loads: Sequence[np.ndarray],
+    k: int,
+    avail: Sequence[np.ndarray] | None = None,
+    **kw,
+) -> BatchResult:
+    """Solve B phi-BIC instances at once; per-instance output contract of
+    :func:`repro.core.soar.soar` (optimal costs, at-most-k blue masks).
+
+    Instances may be ragged (different n, height, children); batches of
+    similar shape share one compiled executable (jit key: the packed
+    level layout + ``k``). ``use_pallas=None`` auto-dispatches: Pallas
+    kernel on TPU, fused jnp elsewhere.
+    """
+    return solve_forest(build_forest(trees, loads, avail), k, **kw)

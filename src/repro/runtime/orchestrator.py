@@ -18,7 +18,8 @@ import dataclasses
 
 import numpy as np
 
-from ..collectives.schedule import ReduceProgram, build_program, plan
+from ..collectives.schedule import (ReduceProgram, build_program, plan,
+                                    plan_batch)
 from ..collectives.topology import ClusterTopology, fail_devices
 from .stragglers import StragglerPolicy, StragglerReport
 
@@ -133,3 +134,56 @@ class Orchestrator:
         self._residual[blue] -= 1
         self.utilization_history.append(prog.utilization)
         return prog
+
+    def begin_workloads(self, count: int) -> list[ReduceProgram]:
+        """Admit ``count`` workloads with one batched engine solve.
+
+        All instances are solved against the *current* availability
+        snapshot in a single :func:`repro.engine.solve_batch` call; claims
+        are then applied in order, and any workload whose placement
+        touched a switch that ran out of capacity in the meantime is
+        re-solved serially against the updated availability (rare — it
+        needs ``count`` placements to pile onto one switch's last slots).
+        """
+        if self._residual is None:
+            raise ValueError("begin_workloads needs capacity set")
+        snapshot = self._avail()
+        planned = plan_batch([self.topo] * count, self.cfg.k,
+                             [snapshot] * count, strategy=self.cfg.strategy)
+        progs: list[ReduceProgram] = []
+        for blue, prog in planned:
+            if np.any(blue & (self._residual <= 0)):   # capacity collision
+                blue, prog = plan(self.topo, self.cfg.k, avail=self._avail(),
+                                  strategy=self.cfg.strategy)
+            self._residual[blue] -= 1
+            self.utilization_history.append(prog.utilization)
+            progs.append(prog)
+        return progs
+
+    def preplan_failures(
+        self, failure_sets: list[list[int]]
+    ) -> list[tuple[np.ndarray, float]]:
+        """What-if analysis: SOAR placements for hypothetical failures.
+
+        Builds the effective topology of every scenario and solves them
+        all in one batched engine call (same tree shape -> one compiled
+        executable). Returns ``[(blue, utilization)]`` per scenario; the
+        orchestrator can stash these to make real recovery a table lookup.
+        """
+        topos = []
+        for devices in failure_sets:
+            dead = set(np.nonzero(~self.alive | self.quarantined)[0].tolist())
+            dead.update(int(d) for d in devices)
+            topos.append(fail_devices(self.topo0, sorted(dead)))
+        # a real failure replan releases this workload's own claim before
+        # re-placing (_replace); mirror that, or preplans would see fewer
+        # available switches than recovery actually has
+        if self._residual is not None and self.blue is not None:
+            residual = self._residual.copy()
+            residual[self.blue] += 1
+            avail = residual > 0
+        else:
+            avail = self._avail()
+        planned = plan_batch(topos, self.cfg.k, [avail] * len(topos),
+                             strategy=self.cfg.strategy)
+        return [(blue, prog.utilization) for blue, prog in planned]

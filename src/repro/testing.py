@@ -1,0 +1,84 @@
+"""Hypothesis compatibility layer for the property tests.
+
+``from repro.testing import given, settings, st`` resolves to the real
+Hypothesis when it is installed (the ``[test]`` extra pins it; CI always
+has it). In minimal environments without Hypothesis the same names fall
+back to a tiny seeded random-sampling harness implementing the subset the
+test-suite uses — ``st.integers`` / ``st.floats`` / ``st.booleans`` /
+``st.composite``, ``@given`` with positional strategies, and
+``@settings(max_examples=..., deadline=...)`` — so collection never breaks
+and the invariants still get fuzzed (without shrinking or the database;
+install Hypothesis for the real thing).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal containers
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampling rule: ``example(rng) -> value``."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def composite(fn):
+            def builder(*args, **kwargs):
+                def sample(rng):
+                    return fn(lambda s: s.example(rng), *args, **kwargs)
+                return _Strategy(sample)
+            return builder
+
+    st = _FallbackStrategies()
+
+    _DEFAULT_MAX_EXAMPLES = 30
+
+    def given(*strategies):
+        def deco(test):
+            # NB: deliberately no functools.wraps — pytest must see a
+            # zero-argument signature, not the strategy parameters
+            # (it would treat them as fixtures).
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(zlib.crc32(test.__qualname__.encode()))
+                for _ in range(n):
+                    vals = [s.example(rng) for s in strategies]
+                    test(*vals)
+            wrapper.__name__ = test.__name__
+            wrapper.__qualname__ = test.__qualname__
+            wrapper.__doc__ = test.__doc__
+            wrapper.__module__ = test.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(test):
+            test._max_examples = max_examples
+            return test
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

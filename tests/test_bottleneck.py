@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core.bottleneck import bottleneck_phi, solve_bottleneck
 from repro.core.reduce import all_blue, all_red, mask_from_set

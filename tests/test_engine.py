@@ -1,0 +1,178 @@
+"""Batched placement engine vs the serial reference DP.
+
+Parity instances use dyadic rho (multiples of 1/8) so the engine's float32
+tables are bit-exact against the float64 `soar` reference — equality
+asserts are exact, not approximate (see engine/batched.py numerics note).
+"""
+import numpy as np
+import pytest
+
+from repro.core import bt, sample_load
+from repro.core.forest import build_forest
+from repro.core.reduce import phi
+from repro.core.soar import soar
+from repro.core.soar_fast import soar_fast
+from repro.core.tree import DEST, Tree
+from repro.engine import solve_batch, solve_forest
+
+
+def _random_ragged(rng, n_lo=1, n_hi=24, max_span=None):
+    n = int(rng.integers(n_lo, n_hi + 1))
+    parent = np.full(n, DEST, np.int32)
+    for v in range(1, n):
+        lo = 0 if max_span is None else max(0, v - max_span)
+        parent[v] = int(rng.integers(lo, v))
+    rho = rng.integers(1, 32, size=n) / 8.0          # dyadic: f32-exact
+    t = Tree(parent, rho)
+    load = rng.integers(0, 7, size=n)
+    avail = rng.random(n) < 0.7
+    return t, load, avail
+
+
+def _check_batch(trees, loads, avails, k):
+    res = solve_batch(trees, loads, k, avails)
+    for b, t in enumerate(trees):
+        want = soar(t, loads[b], k, avail=avails[b]).cost
+        blue = res.blue_of(b)
+        assert res.costs[b] == want                  # exact (dyadic rho)
+        assert phi(t, loads[b], blue) == want        # mask realizes optimum
+        assert blue.sum() <= k
+        assert not np.any(blue & ~avails[b])
+    return res
+
+
+# ---------------------------------------------------------------------------
+# solve_batch vs soar: >= 50 random ragged instances, exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,k", [(0, 0), (1, 1), (2, 3), (3, 5)])
+def test_parity_random_ragged(seed, k):
+    rng = np.random.default_rng(seed)
+    trees, loads, avails = [], [], []
+    for _ in range(15):                              # 4 params x 15 = 60 > 50
+        t, load, avail = _random_ragged(rng)
+        trees.append(t)
+        loads.append(load)
+        avails.append(avail)
+    _check_batch(trees, loads, avails, k)
+
+
+def test_parity_degenerate_shapes():
+    """Chains, stars, singletons and mixed heights in one batch."""
+    rng = np.random.default_rng(7)
+    trees, loads, avails = [], [], []
+    # singleton
+    trees.append(Tree(np.array([DEST]), np.array([0.5])))
+    # chain of 9
+    trees.append(Tree(np.arange(-1, 8, dtype=np.int32),
+                      rng.integers(1, 16, 9) / 8.0))
+    # star: root with 11 leaves
+    trees.append(Tree(np.array([DEST] + [0] * 11, np.int32),
+                      rng.integers(1, 16, 12) / 8.0))
+    # deep-ish random
+    t, _, _ = _random_ragged(rng, n_lo=16, n_hi=20, max_span=2)
+    trees.append(t)
+    for t in trees:
+        loads.append(rng.integers(0, 7, size=t.n))
+        avails.append(rng.random(t.n) < 0.8)
+    for k in (0, 2, 4):
+        _check_batch(trees, loads, avails, k)
+
+
+def test_masks_match_serial_on_bt():
+    """On BT with power-law loads the engine reproduces soar_fast's masks
+    bit-for-bit (same tables, same tie-breaking)."""
+    t = bt(64, "constant")
+    loads = [sample_load(t, "power-law", seed=s) for s in range(8)]
+    res = solve_batch([t] * 8, loads, 6)
+    for b, L in enumerate(loads):
+        ref = soar_fast(t, L, 6)
+        assert res.costs[b] == ref.cost
+        assert np.array_equal(res.blue_of(b), ref.blue)
+
+
+def test_zero_load_and_unavailable_everything():
+    t = bt(16, "constant")
+    zero = np.zeros(t.n, np.int64)
+    none_avail = np.zeros(t.n, bool)
+    res = solve_batch([t, t], [zero, sample_load(t, "uniform", seed=0)],
+                      3, [None, none_avail])
+    assert res.costs[0] == 0.0                       # nothing to send
+    ref = soar(t, sample_load(t, "uniform", seed=0), 3, avail=none_avail)
+    assert res.costs[1] == ref.cost                  # forced all-red
+    assert res.blue_of(1).sum() == 0
+
+
+def test_costs_only_mode():
+    t = bt(32, "constant")
+    loads = [sample_load(t, "power-law", seed=s) for s in range(4)]
+    f = build_forest([t] * 4, loads)
+    res = solve_forest(f, 4, color=False)
+    assert res.blue is None
+    with pytest.raises(ValueError):
+        res.blue_of(0)
+    for b, L in enumerate(loads):
+        assert res.costs[b] == soar(t, L, 4).cost
+
+
+def test_pallas_and_fused_paths_agree():
+    rng = np.random.default_rng(11)
+    trees, loads, avails = [], [], []
+    for _ in range(5):
+        t, load, avail = _random_ragged(rng, n_hi=14)
+        trees.append(t)
+        loads.append(load)
+        avails.append(avail)
+    a = solve_batch(trees, loads, 2, avails, use_pallas=True, interpret=True)
+    b = solve_batch(trees, loads, 2, avails, use_pallas=False)
+    assert np.array_equal(a.costs, b.costs)
+    assert np.array_equal(a.blue, b.blue)
+
+
+def test_negative_budget_rejected():
+    t = bt(16, "constant")
+    with pytest.raises(ValueError):
+        solve_batch([t], [sample_load(t, "uniform", seed=0)], -1)
+
+
+# ---------------------------------------------------------------------------
+# Forest layout invariants
+# ---------------------------------------------------------------------------
+
+def test_forest_packed_layout_roundtrip():
+    rng = np.random.default_rng(3)
+    trees, loads = [], []
+    for _ in range(6):
+        t, load, _ = _random_ragged(rng)
+        trees.append(t)
+        loads.append(load)
+    f = build_forest(trees, loads)
+    assert f.n_slots >= f.n_max
+    for b, t in enumerate(trees):
+        # slot_of / slot_node are inverse on real nodes
+        for v in range(t.n):
+            s = f.slot_of[b, v]
+            assert f.slot_node[b, s] == v
+            # slot sits inside its depth's level block; internal sub-block
+            d = t.depth[v]
+            o, wi = f.lvl_off[d], f.lvl_internal[d]
+            if t.children[v]:
+                assert o <= s < o + wi
+            else:
+                assert o + wi <= s < o + f.lvl_width[d]
+        # packed child pointers resolve to the children's slots
+        for v in range(t.n):
+            s = f.slot_of[b, v]
+            ch = [c for c in f.pk_kid[b, s] if c < f.n_slots]
+            assert sorted(ch) == sorted(f.slot_of[b, c]
+                                        for c in t.children[v])
+
+
+def test_forest_validates_shapes():
+    t = bt(16, "constant")
+    with pytest.raises(ValueError):
+        build_forest([], [])
+    with pytest.raises(ValueError):
+        build_forest([t], [])
+    with pytest.raises(ValueError):
+        build_forest([t], [np.zeros(3, np.int64)])

@@ -41,6 +41,26 @@ def test_minplus_with_infs_matches_soar_reference():
     np.testing.assert_allclose(got, want, rtol=1e-6)
 
 
+@pytest.mark.parametrize("rows,k", [(1, 1), (9, 7), (70, 33)])
+def test_minplus_engine_fused_path_matches_ref(rows, k):
+    """The engine's fused jnp shift-reduction == the quadratic jnp oracle
+    (including BIG-sentinel entries, the engine's finite stand-in for inf)."""
+    from repro.engine.batched import BIG, _minplus_fused
+    rng = np.random.default_rng(rows * 13 + k)
+    a = rng.uniform(0, 50, (rows, k)).astype(np.float32)
+    b = rng.uniform(0, 50, (rows, k)).astype(np.float32)
+    a[rng.random((rows, k)) < 0.2] = BIG
+    b[rng.random((rows, k)) < 0.2] = BIG
+    got = np.asarray(_minplus_fused(jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(minplus_ref(jnp.asarray(a), jnp.asarray(b)))
+    # entries involving BIG are saturated garbage by design; compare the
+    # real-valued region exactly and the rest only for finiteness
+    realish = want < BIG
+    np.testing.assert_allclose(got[realish], want[realish], rtol=1e-6)
+    assert np.isfinite(got).all()
+    assert (got[~realish] >= BIG * 0.999).all()
+
+
 # ---------------------------------------------------------------------------
 # segment_reduce
 # ---------------------------------------------------------------------------
@@ -54,9 +74,11 @@ def test_segment_reduce(g, c, d, dtype):
     mask = jnp.asarray(rng.random((g, c)) < 0.7)
     got = segment_reduce(x, mask)
     want = segment_reduce_ref(x, mask)
+    # float32 tolerance admits summation-order noise on long segments
+    # (c=32 rows: kernel accumulates in a different order than the oracle)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
-                               rtol=2e-2 if dtype == "bfloat16" else 1e-6,
+                               rtol=2e-2 if dtype == "bfloat16" else 2e-5,
                                atol=1e-2 if dtype == "bfloat16" else 1e-6)
 
 

@@ -1,6 +1,6 @@
 """Hypothesis property tests on phi-BIC invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core.brute import brute_force
 from repro.core.reduce import all_blue, all_red, phi, phi_barrier

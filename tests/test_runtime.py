@@ -101,6 +101,46 @@ def test_capacity_respected_across_workloads():
     assert (orch._residual >= 0).all()
 
 
+def test_preplan_failures_matches_serial_replan():
+    """Batched what-if analysis == what a real failure would replan to."""
+    topo, orch = mk(k=3)
+    scenarios = [[0], [0, 1, 2, 3], [5, 9]]
+    planned = orch.preplan_failures(scenarios)
+    assert len(planned) == len(scenarios)
+    for devices, (blue, util) in zip(scenarios, planned):
+        probe = Orchestrator(topo, OrchestratorConfig(k=3))
+        probe.on_failure(list(devices))
+        assert util == pytest.approx(probe.program.utilization)
+        assert blue.sum() <= 3
+    # preplanning must not mutate the live orchestrator
+    assert orch.replans == 1
+    assert orch.n_alive == topo.n_devices
+
+
+def test_preplan_failures_matches_serial_replan_with_capacity():
+    """Under bounded capacity a real replan first releases this workload's
+    own claim; preplanning must see the same availability."""
+    topo, orch = mk(k=3, capacity=1)
+    planned = orch.preplan_failures([[0], [4, 5]])
+    residual_before = orch._residual.copy()
+    for devices, (blue, util) in zip([[0], [4, 5]], planned):
+        probe = Orchestrator(topo, OrchestratorConfig(k=3, capacity=1))
+        probe.on_failure(list(devices))
+        assert util == pytest.approx(probe.program.utilization)
+    # still a read-only operation
+    assert np.array_equal(orch._residual, residual_before)
+    assert orch.replans == 1
+
+
+def test_begin_workloads_batched_respects_capacity():
+    topo, orch = mk(k=4, capacity=2)          # init claim uses 1 of 2
+    progs = orch.begin_workloads(3)
+    assert len(progs) == 3
+    assert (orch._residual >= 0).all()
+    # 4 total workloads admitted (init + 3)
+    assert len(orch.utilization_history) == 4
+
+
 def test_elastic_rescale_and_budget():
     topo = fleet_tree(2, 4, 4)
     bigger = rescale(topo, 4, 4, 4)
