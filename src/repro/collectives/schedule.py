@@ -134,23 +134,36 @@ def plan(topo: ClusterTopology, k: int, avail: np.ndarray | None = None,
 
 def plan_batch(topos: list[ClusterTopology], k: int,
                avails: list[np.ndarray | None] | None = None,
-               strategy: str = "soar"):
+               strategy: str = "soar", **engine_kw):
     """Batched planning: place B scenarios/workloads in one engine solve.
 
     For ``strategy="soar"`` all instances run through
-    :func:`repro.engine.solve_batch` (one compiled level sweep — same-shape
-    scenario fleets amortize to a single executable); other strategies fall
-    back to the serial per-instance baselines. Returns ``[(blue, program)]``
-    in input order.
+    :func:`repro.engine.solve_batch` — the fully device-resident solve
+    (fused level-fold gather + on-device color), so only the blue masks
+    and costs the program builder needs ever leave the accelerator, and
+    same-shape scenario fleets amortize to a single compiled executable
+    (ragged fleets bucket onto few, see ``build_forest``). Extra keyword
+    arguments (``dtype``, ``use_pallas``, ``cap``, ``debug_tables``, …)
+    pass through to the engine. Other strategies fall back to the serial
+    per-instance baselines. Returns ``[(blue, program)]`` in input order.
     """
     if not topos:
         return []
     avails = [None] * len(topos) if avails is None else list(avails)
     if strategy == "soar":
+        if not engine_kw.get("color", True):
+            raise ValueError("plan_batch builds programs from blue masks; "
+                             "the costs-only mode (color=False) is not "
+                             "usable here — call repro.engine.solve_batch "
+                             "directly")
         from ..engine import solve_batch
         res = solve_batch([tp.tree for tp in topos],
-                          [tp.load for tp in topos], k, avails)
+                          [tp.load for tp in topos], k, avails, **engine_kw)
         blues = [res.blue_of(b) for b in range(len(topos))]
+    elif engine_kw:
+        raise ValueError(
+            f"engine options {sorted(engine_kw)} only apply to "
+            f"strategy='soar', not {strategy!r}")
     else:
         fn = baselines.STRATEGIES[strategy]
         blues = [fn(tp.tree, tp.load, k, avail=av)

@@ -46,6 +46,10 @@ class _TreeStruct:
     rho_up: np.ndarray              # (n, height+2) float64; inf invalid
     internal: tuple[np.ndarray, ...]  # node ids with children, per depth
     leaf: tuple[np.ndarray, ...]      # leaf node ids, per depth
+    sub: np.ndarray                 # (n,) int64 subtree sizes
+    ni: tuple[int, ...]             # len(internal[d]) per depth
+    nl: tuple[int, ...]             # len(leaf[d]) per depth
+    submax: tuple[int, ...]         # max subtree size at depth d
 
 
 _STRUCT_CACHE: dict[int, tuple] = {}
@@ -68,10 +72,18 @@ def _tree_struct(t: Tree) -> _TreeStruct:
             internal[t.depth[v]].append(v)
         else:
             leaf[t.depth[v]].append(v)
+    sub = t.subtree_sizes()
     s = _TreeStruct(
         max_c=max_c, kid=kid, rho_up=t.rho_up_table(),
         internal=tuple(np.asarray(l, np.int32) for l in internal),
-        leaf=tuple(np.asarray(l, np.int32) for l in leaf))
+        leaf=tuple(np.asarray(l, np.int32) for l in leaf),
+        sub=sub,
+        ni=tuple(len(l) for l in internal),
+        nl=tuple(len(l) for l in leaf),
+        submax=tuple(
+            int(sub[internal[d] + leaf[d]].max())
+            if internal[d] or leaf[d] else 0
+            for d in range(h + 1)))
     _STRUCT_CACHE[key] = (weakref.ref(t, lambda _, k=key:
                                       _STRUCT_CACHE.pop(k, None)), s)
     return s
@@ -95,6 +107,7 @@ class Forest:
     kid: np.ndarray                # (B, n_max, max_c) int32; sentinel n_max
     rho_up: np.ndarray             # (B, n_max, h_max+2) float64; inf invalid
     send: np.ndarray               # (B, n_max) int64; 1 iff subtree load > 0
+    sub_size: np.ndarray           # (B, n_max) int64 subtree sizes; 0 padding
     levels: tuple[np.ndarray, ...]  # levels[d]: (B, W_d) int32 node ids at
                                     # depth d, padded with n_max
     # -- level-packed (slot-indexed) layout for the batched gather ----------
@@ -102,6 +115,12 @@ class Forest:
     slot_node: np.ndarray          # (B, n_slots) int32 slot -> node; -1 pad
     pk_kid: np.ndarray             # (B, n_slots, max_c) int32 child slots;
                                    #   sentinel n_slots (the identity slot)
+    pk_par: np.ndarray             # (B, n_slots) int32: parent's index
+                                   #   *within its own level block* (0 for
+                                   #   roots/padding) — the on-device color
+                                   #   gathers its budget from here
+    pk_cidx: np.ndarray            # (B, n_slots) int32: this slot's index in
+                                   #   its parent's child list (0 roots/pad)
     pk_load: np.ndarray            # (B, n_slots) int64
     pk_send: np.ndarray            # (B, n_slots) int64
     pk_avail: np.ndarray           # (B, n_slots) bool
@@ -110,6 +129,10 @@ class Forest:
     lvl_width: tuple[int, ...]     #   lvl_off[d] + lvl_width[d])
     lvl_internal: tuple[int, ...]  # first lvl_internal[d] slots of the block
                                    #   are internal nodes, the rest leaves
+    lvl_sub: tuple[int, ...]       # max subtree size of any node at level d
+                                   #   (static knapsack bound: a level-d table
+                                   #   never needs more than min(k, lvl_sub[d])
+                                   #   + 1 budget columns)
 
     @property
     def batch(self) -> int:
@@ -132,12 +155,51 @@ class Forest:
         return int(self.kid.shape[2])
 
 
+def _bucket_up(x: int) -> int:
+    """Round up to the next power of two (0 and 1 are their own buckets)."""
+    return x if x <= 1 else 1 << (x - 1).bit_length()
+
+
+# jit-cache telemetry: how many forests were packed, and how many *distinct*
+# compiled layouts those forests map to (see :func:`layout_key`).
+_LAYOUTS_SEEN: set[tuple] = set()
+_FORESTS_BUILT: int = 0
+
+
+def layout_key(f: Forest) -> tuple:
+    """The static part of the engine's jit key for this forest.
+
+    Two forests with equal layout keys (and equal budget k / dtype / flags)
+    reuse one compiled executable in ``repro.engine``.
+    """
+    return (f.batch, f.n_max, f.n_slots, f.h_max, f.max_children,
+            f.lvl_off, f.lvl_width, f.lvl_internal, f.lvl_sub)
+
+
+def layout_stats() -> dict:
+    """Packing-side cache telemetry: forests built vs distinct jit layouts."""
+    return {"forests_built": _FORESTS_BUILT,
+            "distinct_layouts": len(_LAYOUTS_SEEN)}
+
+
 def build_forest(
     trees: Sequence[Tree],
     loads: Sequence[np.ndarray],
     avail: Sequence[np.ndarray] | None = None,
+    *,
+    bucket: bool = True,
 ) -> Forest:
-    """Stack B (tree, load[, avail]) instances into one padded Forest."""
+    """Stack B (tree, load[, avail]) instances into one padded Forest.
+
+    ``bucket=True`` (default) rounds the layout dimensions that feed the
+    engine's jit key — per-level internal/leaf widths, ``max_children``,
+    the per-level subtree-size caps, and ``h_max`` (to the next even
+    height) — up to bucket boundaries (powers of two). Ragged multi-tenant
+    batches whose exact shapes differ then collapse onto a handful of
+    compiled executables instead of recompiling per layout; the extra slots
+    are ordinary padded slots (identity children, zero load) that the
+    sweep already tolerates. ``bucket=False`` packs exact shapes.
+    """
     if len(trees) == 0:
         raise ValueError("empty forest")
     if len(loads) != len(trees):
@@ -148,8 +210,12 @@ def build_forest(
     structs = [_tree_struct(t) for t in trees]
     n_max = max(t.n for t in trees)
     h_max = max(t.height for t in trees)
-    H2 = h_max + 2
     max_c = max(max(s.max_c for s in structs), 1)
+    if bucket:
+        n_max = _bucket_up(n_max)
+        h_max += h_max & 1           # next even height
+        max_c = _bucket_up(max_c)
+    H2 = h_max + 2
 
     parent = np.full((B, n_max), -2, np.int32)
     rho = np.ones((B, n_max), np.float64)
@@ -162,6 +228,7 @@ def build_forest(
     height = np.zeros(B, np.int32)
     kid = np.full((B, n_max, max_c), n_max, np.int32)   # identity sentinel
     rho_up = np.full((B, n_max, H2), np.inf, np.float64)
+    sub_size = np.zeros((B, n_max), np.int64)
 
     for b, (t, s) in enumerate(zip(trees, structs)):
         n = t.n
@@ -181,19 +248,20 @@ def build_forest(
         mc = s.kid.shape[1]
         kid[b, :n, :mc] = np.where(s.kid >= 0, s.kid, n_max)
         rho_up[b, :n, : t.height + 2] = s.rho_up
+        sub_size[b, :n] = s.sub
 
+    heights = [int(h) for h in height]
     levels = []
     for d in range(h_max + 1):
-        W = max(max((len(s.internal[d]) + len(s.leaf[d])
-                     if d <= t.height else 0
-                     for t, s in zip(trees, structs)), default=0), 1)
+        W = max(max((s.ni[d] + s.nl[d] if d <= h else 0
+                     for h, s in zip(heights, structs)), default=0), 1)
         lvl = np.full((B, W), n_max, np.int32)
-        for b, (t, s) in enumerate(zip(trees, structs)):
-            if d > t.height:
+        for b, (h, s) in enumerate(zip(heights, structs)):
+            if d > h:
                 continue
-            ni = len(s.internal[d])
+            ni = s.ni[d]
             lvl[b, :ni] = s.internal[d]
-            lvl[b, ni : ni + len(s.leaf[d])] = s.leaf[d]
+            lvl[b, ni : ni + s.nl[d]] = s.leaf[d]
         levels.append(lvl)
 
     # send(v) = 1 iff subtree load positive: bottom-up level sweep, batched
@@ -206,21 +274,26 @@ def build_forest(
     send = (sub > 0).astype(np.int64)
 
     # ---- level-packed slot layout -----------------------------------------
-    lvl_off, lvl_width, lvl_internal = [], [], []
+    lvl_off, lvl_width, lvl_internal, lvl_sub = [], [], [], []
     S = 0
     for d in range(h_max + 1):
-        wi = max((len(s.internal[d]) for t, s in zip(trees, structs)
-                  if d <= t.height), default=0)
-        wl = max((len(s.leaf[d]) for t, s in zip(trees, structs)
-                  if d <= t.height), default=0)
+        wi = max((s.ni[d] for h, s in zip(heights, structs) if d <= h),
+                 default=0)
+        wl = max((s.nl[d] for h, s in zip(heights, structs) if d <= h),
+                 default=0)
+        sub_d = max((s.submax[d] for h, s in zip(heights, structs)
+                     if d <= h), default=0)
+        if bucket:
+            wi, wl, sub_d = _bucket_up(wi), _bucket_up(wl), _bucket_up(sub_d)
         lvl_off.append(S)
         lvl_internal.append(wi)
         lvl_width.append(wi + wl)
+        lvl_sub.append(sub_d)
         S += wi + wl
     slot_of = np.full((B, n_max), S, np.int32)
     slot_node = np.full((B, S), -1, np.int32)
-    for b, (t, s) in enumerate(zip(trees, structs)):
-        for d in range(t.height + 1):
+    for b, (h, s) in enumerate(zip(heights, structs)):
+        for d in range(h + 1):
             o, wi = lvl_off[d], lvl_internal[d]
             vi, vl = s.internal[d], s.leaf[d]
             slot_of[b, vi] = o + np.arange(len(vi), dtype=np.int32)
@@ -240,12 +313,31 @@ def build_forest(
         slot_of[bix[:, :, None], np.minimum(ch, n_max - 1)], S)
     pk_kid = np.where(real[:, :, None], ch_slot, S).astype(np.int32)
 
-    return Forest(trees=tuple(trees), parent=parent, rho=rho, load=load_a,
-                  avail=avail_a, mask=mask, depth=depth, root=root, n=nn,
-                  height=height, kid=kid, rho_up=rho_up, send=send,
-                  levels=tuple(levels),
-                  slot_of=slot_of, slot_node=slot_node, pk_kid=pk_kid,
-                  pk_load=pk_load, pk_send=pk_send, pk_avail=pk_avail,
-                  pk_rho_up=pk_rho_up, lvl_off=tuple(lvl_off),
-                  lvl_width=tuple(lvl_width),
-                  lvl_internal=tuple(lvl_internal))
+    # inverse child pointers: each slot's parent position (local to the
+    # parent's level block) and its own index in the parent's child list —
+    # the top-down color sweep *gathers* its budget/distance through these
+    # instead of scattering parent -> child (scatter-free jit graphs).
+    off_of_slot = np.zeros(S, np.int64)
+    for d in range(h_max + 1):
+        off_of_slot[lvl_off[d] : lvl_off[d] + lvl_width[d]] = lvl_off[d]
+    pk_par = np.zeros((B, S), np.int32)
+    pk_cidx = np.zeros((B, S), np.int32)
+    bs, ss, ms = np.nonzero(pk_kid < S)
+    cs = pk_kid[bs, ss, ms]
+    pk_par[bs, cs] = (ss - off_of_slot[ss]).astype(np.int32)
+    pk_cidx[bs, cs] = ms.astype(np.int32)
+
+    f = Forest(trees=tuple(trees), parent=parent, rho=rho, load=load_a,
+               avail=avail_a, mask=mask, depth=depth, root=root, n=nn,
+               height=height, kid=kid, rho_up=rho_up, send=send,
+               sub_size=sub_size, levels=tuple(levels),
+               slot_of=slot_of, slot_node=slot_node, pk_kid=pk_kid,
+               pk_par=pk_par, pk_cidx=pk_cidx,
+               pk_load=pk_load, pk_send=pk_send, pk_avail=pk_avail,
+               pk_rho_up=pk_rho_up, lvl_off=tuple(lvl_off),
+               lvl_width=tuple(lvl_width),
+               lvl_internal=tuple(lvl_internal), lvl_sub=tuple(lvl_sub))
+    global _FORESTS_BUILT
+    _FORESTS_BUILT += 1
+    _LAYOUTS_SEEN.add(layout_key(f))
+    return f

@@ -15,6 +15,15 @@ from __future__ import annotations
 
 import numpy as np
 
+#: Finite +inf stand-in shared by every accelerated min-plus path (the
+#: engine's fused jnp fold, the Pallas kernels and their interpret-mode
+#: oracles). Padded/invalid slots must hold a *finite* sentinel so that
+#: ``0 * pad`` stays finite (``0 * inf`` is NaN and would poison the min
+#: reductions); 1e18 is exactly representable in float32 and far above any
+#: reachable utilization. Host float64 references keep using ``np.inf`` —
+#: they never multiply a pad by zero.
+BIG = 1e18
+
 
 def minplus(A: np.ndarray, B: np.ndarray, out_w: int | None = None) -> np.ndarray:
     """Row-wise min-plus convolution. A: (L, Wa), B: (L, Wb) -> (L, out_w).

@@ -1,11 +1,12 @@
 """Batched multi-tenant SOAR placement engine.
 
 ``solve_batch(trees, loads, k, avail)`` solves B phi-BIC instances in one
-level-synchronous JAX sweep (see ``batched.py``); the serial per-instance
-solvers stay in ``repro.core``.
+device-resident level-synchronous JAX sweep — fused level-fold gather plus
+on-device traceback; only masks and costs leave the accelerator (see
+``batched.py``). The serial per-instance solvers stay in ``repro.core``.
 """
-from .batched import (BatchResult, color_batch, gather_batch, solve_batch,
-                      solve_forest)
+from .batched import (BatchResult, cache_stats, color_batch, gather_batch,
+                      solve_batch, solve_forest)
 
-__all__ = ["BatchResult", "color_batch", "gather_batch", "solve_batch",
-           "solve_forest"]
+__all__ = ["BatchResult", "cache_stats", "color_batch", "gather_batch",
+           "solve_batch", "solve_forest"]

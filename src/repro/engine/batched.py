@@ -1,27 +1,42 @@
-"""Batched multi-tenant SOAR placement engine (JAX).
+"""Batched multi-tenant SOAR placement engine (JAX), device-resident.
 
 Solves B phi-BIC instances at once over the level-packed
-:class:`repro.core.forest.Forest` layout:
+:class:`repro.core.forest.Forest` layout. Both halves of SOAR now run on
+the accelerator, and only the answers cross the host/device boundary:
 
   * **Gather** — a level-synchronous sweep (deepest level first) where all
     nodes of a depth level, across *all* instances, are processed
     together. The budget-split min over children (the mCost tropical
-    convolution of Algorithm 3) becomes one batched min-plus over every
-    (instance, node, ell) row of the level's *internal* sub-block,
-    dispatched to the Pallas TPU kernel in ``repro.kernels.minplus`` on
-    TPU and to a fused jnp shift-reduction elsewhere. Leaves are pure
-    elementwise. Because each level is a contiguous slot block, results
+    convolution of Algorithm 3) runs through the **fused level-fold**
+    in ``repro.kernels.minplus.levelfold``: one launch per level that
+    gathers every child's rows and chains the convolutions in-register
+    (Pallas kernel on TPU, fused jnp elsewhere). Convolution widths are
+    truncated per level to the ``min(k, subtree size)`` knapsack bound
+    (``Forest.lvl_sub``) and flat-padded back — exact for the monotone
+    at-most-k tables, and most of a tree's nodes sit in deep levels with
+    tiny subtrees. Because each level is a contiguous slot block, results
     land via static slice updates — no scatter ops.
-  * **Color** — the traceback is orders of magnitude cheaper than the
-    gather (paper Sec. 5.4 / fig9) and runs on the host, but also level
-    synchronously: all nodes of a level, across all instances, replay
-    their budget split with vectorized numpy (see :func:`color_batch`).
+  * **Color** — the traceback also runs on device: a top-down
+    level-synchronous sweep over the same packed layout replays each
+    node's budget split against the resident DP tables with the serial
+    solver's exact tie-breaking (blue iff strictly better; first
+    minimizer per child split). The sweep is scatter-free: each level
+    publishes its split matrix and the next level *gathers* its budget
+    and barrier distance through inverse parent pointers. No
+    backpointers are stored — splits are re-derived from the tables,
+    which are already in device memory.
 
-Numerics: the DP runs on a finite ``BIG`` sentinel instead of ``inf`` so
-that ``0 * BIG`` stays finite (padded slots would otherwise produce NaN
-via ``0 * inf``). Tables are float32 by default; instances whose rho
-values are exactly representable (dyadic rates — every paper topology and
-the fleet trees) reproduce the float64 reference *bit-exactly*; arbitrary
+Only the ``(B, n_max)`` blue masks and ``(B,)`` costs are pulled back to
+the host (``BatchResult.bytes_to_host`` reports the traffic); the full
+``(B, S+1, h_max+2, k+1)`` table pullback plus host-numpy
+:func:`color_batch` replay of PR 1 survives behind the
+``debug_tables=True`` escape hatch.
+
+Numerics: the DP runs on the finite ``BIG`` sentinel
+(``repro.core.tropical.BIG``) instead of ``inf`` so that ``0 * BIG``
+stays finite. Tables are float32 by default; instances whose rho values
+are exactly representable (dyadic rates — every paper topology and the
+fleet trees) reproduce the float64 reference *bit-exactly*; arbitrary
 rates match to float32 eps. Pass ``dtype=jnp.float64`` under
 ``jax_enable_x64`` for exactness on arbitrary rates.
 
@@ -35,48 +50,27 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import weakref
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.forest import Forest, build_forest
+from ..core.forest import Forest, build_forest, layout_stats
 from ..core.tree import Tree
-from ..core.tropical import minplus_batch
+from ..core.tropical import BIG, minplus_batch
+from ..kernels.minplus.levelfold import chain_fold, level_fold, minplus_fused
 
-BIG = 1e18  # finite +inf stand-in; exactly representable in float32
-
-
-def _minplus_fused(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Fused jnp min-plus convolution, (rows, K) x (rows, K) -> (rows, K).
-
-    The j-shift reduction of the Pallas kernel body, unrolled over the
-    (static) budget width so XLA fuses it into one elementwise loop — no
-    (rows, K, K) candidate tensor is ever materialized.
-    """
-    rows, k = a.shape
-    acc = a + b[:, :1]
-    for j in range(1, k):
-        shifted = jnp.concatenate(
-            [jnp.full((rows, j), BIG, a.dtype), a[:, : k - j]], axis=1)
-        acc = jnp.minimum(acc, shifted + b[:, j : j + 1])
-    return acc
-
-
-def _minplus_rows(a: jax.Array, b: jax.Array, use_pallas: bool,
-                  interpret: bool) -> jax.Array:
-    """Backend dispatch for the batched tropical convolution."""
-    if use_pallas:
-        from ..kernels.minplus.ops import minplus
-        return minplus(a, b, interpret=interpret)
-    return _minplus_fused(a, b)
+# back-compat alias: the engine's fused convolution now lives with the
+# level-fold kernel so both backends share one bit-exact implementation
+_minplus_fused = minplus_fused
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "k",
-                     "use_pallas", "interpret"))
+    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "lvl_sub", "k",
+                     "cap", "use_pallas", "interpret"))
 def _gather_packed(
     pk_kid: jax.Array,     # (B, S, max_c) int32 child slots, sentinel S
     pk_load: jax.Array,    # (B, S)
@@ -87,16 +81,23 @@ def _gather_packed(
     lvl_off: tuple,
     lvl_width: tuple,
     lvl_internal: tuple,
+    lvl_sub: tuple,
     k: int,
+    cap: bool,
     use_pallas: bool,
     interpret: bool,
-) -> jax.Array:
+) -> tuple:
     """Level-synchronous batched SOAR-Gather over the packed slot layout.
 
-    Returns DP tables ``X[b, s, ell, i]`` of shape ``(B, S+1, h_max+2,
-    k+1)``; slot ``S`` is the all-zeros min-plus identity, rows beyond a
-    node's ``depth+1`` stay BIG, padded slots hold finite garbage that is
-    never read back.
+    Returns the DP tables as a tuple of per-level **blocks**
+    ``blocks[d]`` of shape ``(B, W_d, d+2, k+1)`` (level d's slots, their
+    valid barrier rows 0..d+1) rather than one monolithic slot array: a
+    node's children live exactly one level down, so each fold only ever
+    reads the adjacent block — and the sweep never pays a functional
+    whole-table update per level. Padded slots hold finite garbage that
+    is never read back. With ``cap=True`` each level's fold runs at the
+    truncated width ``min(k, lvl_sub[d]) + 1`` and is flat-padded to k+1
+    (exact: monotone tables are constant beyond their subtree's budget).
     """
     B, S, max_c = pk_kid.shape
     H2 = pk_rho_up.shape[2]
@@ -106,46 +107,39 @@ def _gather_packed(
     loadf = pk_load.astype(dt)
     sendf = pk_send.astype(dt)
 
-    X = jnp.full((B, S + 1, H2, K), BIG, dt)
-    X = X.at[:, S].set(0.0)                            # identity slot
-
+    blocks: list = [None] * (h_max + 1)
     for d in range(h_max, -1, -1):
         o, W, Wi = lvl_off[d], lvl_width[d], lvl_internal[d]
         nl = d + 2                                     # valid rows 0..d+1
+        if W == 0:                                     # bucketed tail level
+            blocks[d] = jnp.zeros((B, 0, nl, K), dt)
+            continue
+        Kd = min(K, lvl_sub[d] + 1) if cap else K
         rl = pk_rho_up[:, o : o + W, :nl, None]        # (B, W, nl, 1)
+        parts = []
         if Wi > 0:
             # red chain: children see the barrier one hop further -> child
-            # row ell+1 aligns with row ell. Internal nodes only exist at
-            # d < h_max, so rows 1..nl+1 always fit in H2.
-            kidv = pk_kid[:, o : o + Wi]               # (B, Wi, max_c)
-            Xs = X[:, :, 1 : nl + 1, :]
-            c0 = kidv[:, :, 0]
-            acc_r = jnp.take_along_axis(Xs, c0[:, :, None, None], axis=1)
-            acc_b = jnp.take_along_axis(X[:, :, 1, :], c0[:, :, None], axis=1)
-            for m in range(1, max_c):
-                cm = kidv[:, :, m]
-                ch_r = jnp.take_along_axis(Xs, cm[:, :, None, None], axis=1)
-                ch_b = jnp.take_along_axis(X[:, :, 1, :], cm[:, :, None],
-                                           axis=1)
-                # one fused convolution over all (b, v, ell) + blue rows
-                a = jnp.concatenate([acc_r.reshape(-1, K),
-                                     acc_b.reshape(-1, K)])
-                b = jnp.concatenate([ch_r.reshape(-1, K),
-                                     ch_b.reshape(-1, K)])
-                y = _minplus_rows(a, b, use_pallas, interpret)
-                acc_r = y[: B * Wi * nl].reshape(B, Wi, nl, K)
-                acc_b = y[B * Wi * nl :].reshape(B, Wi, K)
-            rli = rl[:, :Wi]
-            red = acc_r + loadf[:, o : o + Wi, None, None] * rli
-            # blue: budget shifts by one (v spends a slot on itself)
-            blue = jnp.concatenate(
-                [jnp.full((B, Wi, nl, 1), BIG, dt),
-                 acc_b[:, :, None, :-1]
-                 + sendf[:, o : o + Wi, None, None] * rli], axis=-1)
-            blue = jnp.where(pk_avail[:, o : o + Wi, None, None], blue, BIG)
-            out = jnp.minimum(red, blue)
-            out = jax.lax.cummin(out, axis=3)          # at-most-k monotone
-            X = X.at[:, o : o + Wi, :nl, :].set(out)
+            # rows 1..nl+1 align with our rows 0..nl (they fit: the child
+            # block has nl+1 rows). Children are addressed level-locally,
+            # with the all-zeros min-plus identity appended at index W1.
+            o1, W1 = lvl_off[d + 1], lvl_width[d + 1]
+            ch = blocks[d + 1]
+            xs = jnp.concatenate(
+                [ch[:, :, 1 : nl + 1, :Kd],
+                 jnp.zeros((B, 1, nl, Kd), dt)], axis=1)
+            xb = jnp.concatenate(
+                [ch[:, :, 1, :Kd], jnp.zeros((B, 1, Kd), dt)], axis=1)
+            kid_local = jnp.minimum(pk_kid[:, o : o + Wi] - o1, W1)
+            out = level_fold(
+                xs, xb, kid_local, loadf[:, o : o + Wi],
+                sendf[:, o : o + Wi], pk_avail[:, o : o + Wi],
+                pk_rho_up[:, o : o + Wi, :nl], nl=nl, kcap=Kd,
+                use_pallas=use_pallas, interpret=interpret)
+            if Kd < K:                                 # flat-pad (monotone)
+                out = jnp.concatenate(
+                    [out, jnp.broadcast_to(out[..., -1:],
+                                           (B, Wi, nl, K - Kd))], axis=-1)
+            parts.append(out)
         if W - Wi > 0:
             # leaves: X_v(l, 0) = L(v) rho; X_v(l, i>=1) also allows blue
             lo = o + Wi
@@ -154,55 +148,264 @@ def _gather_packed(
             sr = sendf[:, lo : o + W, None, None] * rll
             rest = jnp.where(pk_avail[:, lo : o + W, None, None],
                              jnp.minimum(lr, sr), lr)
-            out = jnp.concatenate(
+            parts.append(jnp.concatenate(
                 [lr, jnp.broadcast_to(rest, (*rest.shape[:3], K - 1))],
-                axis=-1)
-            X = X.at[:, lo : o + W, :nl, :].set(out)
-    return X
+                axis=-1))
+        blocks[d] = parts[0] if len(parts) == 1 else jnp.concatenate(
+            parts, axis=1)
+    return tuple(blocks)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "lvl_sub", "k",
+                     "cap"))
+def _color_packed(
+    blocks: tuple,         # per-level gather blocks, see _gather_packed
+    pk_kid: jax.Array,     # (B, S, max_c) int32 child slots, sentinel S
+    pk_par: jax.Array,     # (B, S) int32 parent's index in *its* level block
+    pk_cidx: jax.Array,    # (B, S) int32 own index in parent's child list
+    pk_load: jax.Array,    # (B, S)
+    pk_send: jax.Array,    # (B, S)
+    pk_avail: jax.Array,   # (B, S) bool
+    pk_rho_up: jax.Array,  # (B, S, H2), BIG at invalid ell
+    root_slot: jax.Array,  # (B,) int32
+    slot_of: jax.Array,    # (B, n_max) int32 node -> slot (S at padding)
+    *,
+    lvl_off: tuple,
+    lvl_width: tuple,
+    lvl_internal: tuple,
+    lvl_sub: tuple,
+    k: int,
+    cap: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """On-device SOAR-Color: top-down level-synchronous traceback.
+
+    Replays Algorithm 4's budget split against the resident per-level
+    table blocks with the exact tie-breaking of the serial ``soar_color``
+    (blue iff *strictly* better; *first* minimizer of each child split —
+    both ``jnp.argmin`` semantics). The sweep is **scatter-free**:
+    instead of parents scattering budgets down to child slots, each level
+    stores its internal nodes' split matrix and the next level *gathers*
+    its budget and barrier distance through the inverse pointers
+    ``pk_par`` / ``pk_cidx`` (XLA:CPU compiles gathers orders of
+    magnitude faster than the equivalent scatter chain). Like the gather,
+    the replayed chains run at the level's ``min(k, lvl_sub[d]) + 1``
+    truncated width: a level-d node can never hold more budget than its
+    subtree (the root may, when k > n — all its reads then land in the
+    flat region of the monotone tables, where clipped indexing is exact,
+    and the first-minimizer split provably stays below the cap). Leaves
+    (the back of each level block) skip chains and splits entirely —
+    their blue test is elementwise. Returns the node-indexed ``(B,
+    n_max)`` blue mask and the ``(B,)`` optimal costs — the only arrays a
+    caller needs to pull off-device.
+    """
+    B, _, max_c = pk_kid.shape
+    K = k + 1
+    dt = blocks[0].dtype
+    loadf = pk_load.astype(dt)
+    sendf = pk_send.astype(dt)
+
+    blue_parts = []
+    prev_split = prev_lc = None      # prev level's child budgets / barrier
+    for d, (o, W, Wi) in enumerate(zip(lvl_off, lvl_width, lvl_internal)):
+        if W == 0:
+            continue                 # bucketed heights: only trailing levels
+        if d == 0:
+            ids = o + jnp.arange(W, dtype=jnp.int32)[None, :]
+            i = jnp.where(ids == root_slot[:, None], k, 0).astype(jnp.int32)
+            el = jnp.ones((B, W), jnp.int32)
+        else:
+            pl = pk_par[:, o : o + W]
+            i = jnp.take_along_axis(
+                prev_split, pl * max_c + pk_cidx[:, o : o + W], axis=1)
+            el = jnp.take_along_axis(prev_lc, pl, axis=1)
+        rl = jnp.take_along_axis(pk_rho_up[:, o : o + W], el[:, :, None],
+                                 axis=2)[..., 0]
+        can_blue = pk_avail[:, o : o + W] & (i >= 1)
+        if Wi < W:
+            # leaves: no children to chain or split — elementwise test
+            red_l = loadf[:, o + Wi : o + W] * rl[:, Wi:]
+            blue_l = jnp.where(can_blue[:, Wi:],
+                               sendf[:, o + Wi : o + W] * rl[:, Wi:],
+                               jnp.inf)
+            leaf_blue = blue_l < red_l
+        if Wi == 0:
+            blue_parts.append(leaf_blue)
+            continue                 # leaf-only level: nothing deeper
+        Kc = min(K, lvl_sub[d] + 1) if cap else K
+        jj = jnp.arange(Kc)[None, None, :]
+        i_in, el_in = i[:, :Wi], el[:, :Wi]
+        o1, W1 = lvl_off[d + 1], lvl_width[d + 1]
+        nl1 = d + 3                  # rows of the child level's block
+        ch = jnp.concatenate(
+            [blocks[d + 1][..., :Kc],
+             jnp.zeros((B, 1, nl1, Kc), dt)], axis=1)  # + identity
+        chf = ch.reshape(B, (W1 + 1) * nl1, Kc)
+        kidl = jnp.minimum(pk_kid[:, o : o + Wi] - o1, W1)
+
+        def slot_rows(row, kidl=kidl, chf=chf, nl1=nl1, Kc=Kc):
+            """All children's tables at per-node row: (B, Wi, max_c, Kc)."""
+            idx = (kidl * nl1 + row[:, :, None]).reshape(B, Wi * max_c)
+            return jnp.take_along_axis(
+                chf, idx[:, :, None], axis=1).reshape(B, Wi, max_c, Kc)
+
+        # partial min-plus chains over children, red (row ell+1) and blue
+        # (row 1) variants; sentinel children hit the appended identity.
+        # chain_fold is the same fold the gather ran, so replayed values
+        # match the tables bit-for-bit.
+        er = el_in + 1               # <= d+2: always inside the child block
+        row1 = jnp.ones_like(er)
+        st_r = jnp.moveaxis(slot_rows(er), 2, 0).reshape(max_c, B * Wi, Kc)
+        st_b = jnp.moveaxis(slot_rows(row1), 2, 0).reshape(max_c, B * Wi, Kc)
+        st = jnp.concatenate([st_r, st_b], axis=1)     # (max_c, 2BWi, Kc)
+        _, parts = chain_fold(st, collect=True)
+        ch_r = parts[:, : B * Wi].reshape(max_c, B, Wi, Kc)
+        ch_b = parts[:, B * Wi :].reshape(max_c, B, Wi, Kc)
+        ic = jnp.minimum(i_in, Kc - 1)                 # flat-region clip
+        red_val = jnp.take_along_axis(ch_r[-1], ic[..., None],
+                                      axis=2)[..., 0] + loadf[:, o : o + Wi] * rl[:, :Wi]
+        ib = jnp.clip(i_in - 1, 0, Kc - 1)
+        blue_val = jnp.where(
+            can_blue[:, :Wi],
+            jnp.take_along_axis(ch_b[-1], ib[..., None], axis=2)[..., 0]
+            + sendf[:, o : o + Wi] * rl[:, :Wi],
+            jnp.inf)
+        isblue = blue_val < red_val                    # strict, as in serial
+        blue_parts.append(isblue if Wi == W else
+                          jnp.concatenate([isblue, leaf_blue], axis=1))
+        bud = i_in - isblue.astype(jnp.int32)
+        lc = jnp.where(isblue, 1, el_in + 1)
+        # split the budget among children, last child first (mSplit
+        # replay), again as a scan over the child index. Sentinel children
+        # read the identity's zero table: their vals are the (monotone
+        # non-increasing) partial chain at bud - j, which is non-decreasing
+        # in j, so the first minimizer is j = 0 and the running budget
+        # passes through untouched — no masking needed.
+        chain = jnp.where(isblue[None, :, :, None], ch_b, ch_r)
+        # children see the barrier at row lc = isblue ? 1 : ell+1 — both
+        # variants were already gathered (st_b at row 1, st_r at ell+1),
+        # so select instead of gathering a third time
+        xc = jnp.where(isblue[None, :, :, None],
+                       st_b.reshape(max_c, B, Wi, Kc),
+                       st_r.reshape(max_c, B, Wi, Kc))
+        xc_rev = xc[::-1][:-1]                         # m desc
+        prev_rev = chain[:-1][::-1]                    # chain[m-1], m desc
+
+        def split_step(bud, inp, jj=jj, Kc=Kc):
+            xc, prev = inp
+            feas = jj <= bud[..., None]
+            vals = jnp.take_along_axis(
+                prev, jnp.clip(bud[..., None] - jj, 0, Kc - 1), axis=2)
+            vals = jnp.where(feas, vals + xc, jnp.inf)
+            best_j = jnp.argmin(vals, axis=2).astype(jnp.int32)
+            return bud - best_j, best_j
+
+        bud, best_rev = jax.lax.scan(split_step, bud, (xc_rev, prev_rev))
+        split = jnp.concatenate([bud[None], best_rev[::-1]], axis=0)
+        prev_split = jnp.moveaxis(split, 0, 2).reshape(B, Wi * max_c)
+        prev_lc = lc
+
+    costs = blocks[0][jnp.arange(B), root_slot - lvl_off[0], 1, k]
+    blue_slots = jnp.concatenate(blue_parts, axis=1)   # blocks are ordered
+    blue_pad = jnp.concatenate(
+        [blue_slots, jnp.zeros((B, 1), bool)], axis=1)
+    return jnp.take_along_axis(blue_pad, slot_of, axis=1), costs
+
+
+_INPUT_CACHE: dict[tuple, tuple] = {}
+
+
+def _device_inputs(f: Forest, dtype) -> tuple:
+    """One host->device upload of the packed arrays (shared gather/color).
+
+    Returns ``(kid, load, send, avail, rho, par, cidx, slot_of,
+    root_slot)`` device arrays — the first five feed the gather, the rest
+    the color sweep. Cached per (Forest identity, dtype): a serving loop
+    re-solving one built Forest (the orchestrator replanning pattern)
+    sanitizes and uploads the byte-identical arrays once, not per solve.
+    The cache assumes built Forests are immutable — mutating a Forest's
+    numpy arrays in place after a solve would silently reuse the stale
+    device copies; rebuild via :func:`build_forest` instead (cheap: the
+    per-tree structure is itself cached).
+    """
+    key = (id(f), np.dtype(dtype).str)
+    hit = _INPUT_CACHE.get(key)
+    if hit is not None and hit[0]() is f:
+        return hit[1]
+    R = jnp.asarray(np.where(np.isfinite(f.pk_rho_up), f.pk_rho_up, BIG),
+                    dtype)
+    inputs = (jnp.asarray(f.pk_kid), jnp.asarray(f.pk_load),
+              jnp.asarray(f.pk_send), jnp.asarray(f.pk_avail), R,
+              jnp.asarray(f.pk_par), jnp.asarray(f.pk_cidx),
+              jnp.asarray(f.slot_of),
+              jnp.asarray(f.slot_of[np.arange(f.batch), f.root]))
+    _INPUT_CACHE[key] = (weakref.ref(f, lambda _, k=key:
+                                     _INPUT_CACHE.pop(k, None)), inputs)
+    return inputs
 
 
 def _gather_device(f: Forest, k: int, dtype, use_pallas: bool,
-                   interpret: bool) -> jax.Array:
-    R = np.where(np.isfinite(f.pk_rho_up), f.pk_rho_up, BIG)
+                   interpret: bool, cap: bool = True,
+                   inputs: tuple | None = None) -> tuple:
+    """Run the resident gather; returns the per-level device table blocks."""
+    kid, load, send, avail, R = (
+        _device_inputs(f, dtype) if inputs is None else inputs)[:5]
     return _gather_packed(
-        jnp.asarray(f.pk_kid), jnp.asarray(f.pk_load),
-        jnp.asarray(f.pk_send), jnp.asarray(f.pk_avail),
-        jnp.asarray(R, dtype),
+        kid, load, send, avail, R,
         lvl_off=f.lvl_off, lvl_width=f.lvl_width,
-        lvl_internal=f.lvl_internal,
-        k=k, use_pallas=bool(use_pallas), interpret=bool(interpret))
+        lvl_internal=f.lvl_internal, lvl_sub=f.lvl_sub,
+        k=k, cap=bool(cap), use_pallas=bool(use_pallas),
+        interpret=bool(interpret))
 
 
-def _unpack_tables(f: Forest, X: jax.Array) -> np.ndarray:
-    """Slot-indexed device tables -> node-indexed host float64 tables."""
-    Xh = np.asarray(X, np.float64)                     # (B, S+1, H2, K)
+def _unpack_tables(f: Forest, blocks: tuple) -> np.ndarray:
+    """Per-level device blocks -> node-indexed host float64 tables.
+
+    Debug escape hatch (``debug_tables=True``): pulls the *entire* DP
+    table off-device. The default solve path never calls this. Rows
+    beyond a level's ``depth+1`` are BIG (never read); index ``n_max`` is
+    the all-zeros identity table sentinel children point at.
+    """
+    B, S = f.batch, f.n_slots
+    H2 = f.h_max + 2
+    K = blocks[0].shape[-1]
+    Xh = np.full((B, S + 1, H2, K), BIG, np.float64)
+    for d, blk in enumerate(blocks):
+        o, W = f.lvl_off[d], f.lvl_width[d]
+        if W:
+            Xh[:, o : o + W, : d + 2] = np.asarray(blk, np.float64)
+    Xh[:, S] = 0.0
     # node v of instance b lives at slot slot_of[b, v]; padded nodes point
     # at the identity slot, which is exactly the zero table color_batch
     # expects at index n_max.
     idx = np.concatenate(
-        [f.slot_of, np.full((f.batch, 1), f.n_slots, np.int32)], axis=1)
-    return Xh[np.arange(f.batch)[:, None], idx]
+        [f.slot_of, np.full((B, 1), S, np.int32)], axis=1)
+    return Xh[np.arange(B)[:, None], idx]
 
 
 def gather_batch(f: Forest, k: int, *, dtype=jnp.float32,
-                 use_pallas: bool = False,
-                 interpret: bool = False) -> np.ndarray:
+                 use_pallas: bool = False, interpret: bool = False,
+                 cap: bool = True) -> np.ndarray:
     """Batched SOAR-Gather; returns *node-indexed* DP tables.
 
     Shape ``(B, n_max+1, h_max+2, k+1)`` float64 on host; index ``n_max``
     is the all-zeros identity slot (what sentinel children point at).
+    Debug/inspection API — the solve path keeps tables on device.
     """
     return _unpack_tables(
-        f, _gather_device(f, k, dtype, use_pallas, interpret))
+        f, _gather_device(f, k, dtype, use_pallas, interpret, cap))
 
 
 def color_batch(f: Forest, X: np.ndarray, k: int) -> np.ndarray:
-    """Batched SOAR-Color: level-synchronous traceback over all instances.
+    """Host-numpy SOAR-Color over *node-indexed* gathered tables.
 
-    ``X`` are the node-indexed gathered tables (host, float64). Replays
-    Algorithm 4's budget split with the exact tie-breaking of the serial
-    ``soar_color`` (blue iff strictly better; first minimizer of each
-    child split), vectorized over every node of a level across the batch.
+    PR 1's traceback, kept as the ``debug_tables=True`` escape hatch and
+    as the parity oracle for the on-device color: level-synchronous
+    replay of Algorithm 4's budget split with the exact tie-breaking of
+    the serial ``soar_color`` (blue iff strictly better; first minimizer
+    of each child split), vectorized over every node of a level across
+    the batch. ``X`` as produced by :func:`gather_batch` (host, float64).
     """
     B, n_max = f.mask.shape
     K = k + 1
@@ -277,12 +480,38 @@ class BatchResult:
                               # in costs-only mode (color=False)
     costs: np.ndarray         # (B,) float64 — optimal phi per instance
     n: np.ndarray             # (B,) real node counts (mask key for blue)
+    bytes_to_host: int = 0    # device->host traffic this solve actually paid
+    tables: np.ndarray | None = None   # node-indexed DP tables; only under
+                                       # the debug_tables=True escape hatch
 
     def blue_of(self, b: int) -> np.ndarray:
         """Unpadded blue mask of instance b."""
         if self.blue is None:
             raise ValueError("solve_batch ran with color=False")
         return self.blue[b, : int(self.n[b])]
+
+
+def _jit_cache_size(fn) -> int:
+    try:
+        return int(fn._cache_size())
+    except Exception:  # pragma: no cover - private API drift across jax
+        return -1
+
+
+def cache_stats() -> dict:
+    """Engine compile-cache telemetry.
+
+    ``gather_cache`` / ``color_cache`` count compiled executables held by
+    the two jitted sweeps; ``forests_built`` / ``distinct_layouts`` are
+    packing-side counts from :func:`repro.core.forest.layout_stats` —
+    with layout bucketing on, ``distinct_layouts`` (and hence the jit
+    caches) stays far below ``forests_built`` on ragged fleets.
+    """
+    return {
+        "gather_cache": _jit_cache_size(_gather_packed),
+        "color_cache": _jit_cache_size(_color_packed),
+        **layout_stats(),
+    }
 
 
 def solve_forest(
@@ -293,24 +522,48 @@ def solve_forest(
     dtype=jnp.float32,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    cap: bool = True,
+    debug_tables: bool = False,
 ) -> BatchResult:
-    """:func:`solve_batch` for a pre-built Forest (amortizes packing)."""
+    """:func:`solve_batch` for a pre-built Forest (amortizes packing).
+
+    Default path is fully device-resident: gather and color both run on
+    the accelerator and only the ``(B, n_max)`` blue masks plus ``(B,)``
+    costs are transferred. ``color=False`` transfers just the costs.
+    ``debug_tables=True`` is the escape hatch to PR 1's path — full table
+    pullback, host-numpy color, tables attached to the result.
+    ``cap=False`` disables the subtree-budget width truncation (full
+    ``k+1``-wide convolutions at every level, as in PR 1).
+    """
     if k < 0:
         raise ValueError("budget k must be non-negative")
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    X = _gather_device(f, k, dtype, use_pallas, interpret)
-    root_slot = f.slot_of[np.arange(f.batch), f.root]
+    inputs = _device_inputs(f, dtype)
+    blocks = _gather_device(f, k, dtype, use_pallas, interpret, cap, inputs)
+    kid_d, load_d, send_d, avail_d, R, par_d, cidx_d, slot_d, root_d = inputs
     if not color:
         # costs-only planning mode: pull back B scalars, not the tables
-        roots = X[jnp.arange(f.batch), jnp.asarray(root_slot), 1, k]
-        return BatchResult(blue=None,
-                           costs=np.asarray(roots, np.float64),
-                           n=f.n.copy())
-    Xn = _unpack_tables(f, X)
-    costs = Xn[np.arange(f.batch), f.root, 1, k]
-    return BatchResult(blue=color_batch(f, Xn, k), costs=costs,
-                       n=f.n.copy())
+        roots = np.asarray(
+            blocks[0][jnp.arange(f.batch), root_d - f.lvl_off[0], 1, k])
+        return BatchResult(blue=None, costs=roots.astype(np.float64),
+                           n=f.n.copy(), bytes_to_host=int(roots.nbytes))
+    if debug_tables:
+        Xn = _unpack_tables(f, blocks)
+        costs = Xn[np.arange(f.batch), f.root, 1, k]
+        return BatchResult(blue=color_batch(f, Xn, k), costs=costs,
+                           n=f.n.copy(), tables=Xn,
+                           bytes_to_host=sum(int(b.nbytes) for b in blocks))
+    blue_dev, costs_dev = _color_packed(
+        blocks, kid_d, par_d, cidx_d, load_d, send_d, avail_d, R,
+        root_d, slot_d,
+        lvl_off=f.lvl_off, lvl_width=f.lvl_width,
+        lvl_internal=f.lvl_internal, lvl_sub=f.lvl_sub, k=k, cap=bool(cap))
+    blue = np.asarray(blue_dev)
+    costs = np.asarray(costs_dev)
+    return BatchResult(blue=blue, costs=costs.astype(np.float64),
+                       n=f.n.copy(),
+                       bytes_to_host=int(blue.nbytes + costs.nbytes))
 
 
 def solve_batch(
@@ -323,9 +576,11 @@ def solve_batch(
     """Solve B phi-BIC instances at once; per-instance output contract of
     :func:`repro.core.soar.soar` (optimal costs, at-most-k blue masks).
 
-    Instances may be ragged (different n, height, children); batches of
-    similar shape share one compiled executable (jit key: the packed
-    level layout + ``k``). ``use_pallas=None`` auto-dispatches: Pallas
-    kernel on TPU, fused jnp elsewhere.
+    Instances may be ragged (different n, height, children); the packed
+    layout is bucketed (see :func:`repro.core.forest.build_forest`), so
+    batches of similar shape share one compiled executable.
+    ``use_pallas=None`` auto-dispatches: fused level-fold Pallas kernel
+    on TPU, fused jnp elsewhere. Everything stays on device; see
+    :func:`solve_forest`.
     """
     return solve_forest(build_forest(trees, loads, avail), k, **kw)

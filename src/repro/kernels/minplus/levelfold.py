@@ -1,0 +1,225 @@
+"""Fused level-fold: one launch per tree level of the batched SOAR-Gather.
+
+The level-synchronous gather in ``repro.engine`` folds, for every internal
+node of a depth level, the min-plus convolutions of all its children's DP
+tables (the mCost chain of Algorithm 3), then applies the red/blue
+recurrence. PR 1 dispatched that as one ``pallas_call`` *per child index*
+(``O(max_children)`` launches per level) with the gathered child rows and
+every partial accumulator round-tripping through HBM. This module fuses
+the whole fold into a single kernel per level:
+
+  * the kernel receives the *child level's* table block (children always
+    live exactly one level down; one batch element per grid step), gathers
+    each child's rows out of it in-kernel, and chains the min-plus
+    convolutions **in-register** — the ``(rows, K)`` partial accumulators
+    never leave VMEM;
+  * the red chain (child rows ``1..nl``), the blue chain (child row 1),
+    the availability mask, the blue budget shift and the at-most-k
+    ``cummin`` all happen in the same kernel body, so a level costs one
+    launch and one HBM write (the level's output block).
+
+``level_fold`` is the dispatcher: ``use_pallas=True`` runs the Pallas
+kernel (``interpret=True`` executes its body in Python — the CPU-container
+validation mode; budget widths are lane-padded to 128 inside
+``level_fold_pallas``; TPU tiling note: the in-kernel child gathers land
+on the sublane axis, which is the part to revisit if a real-TPU lowering
+rejects the kernel), ``use_pallas=False`` runs ``level_fold_jnp``, a fused
+jnp formulation of the identical math that XLA fuses into one loop nest on
+CPU/GPU.
+
+All arithmetic runs on the finite ``BIG`` sentinel from
+``repro.core.tropical`` (never ``inf``: padded slots multiply by zero
+loads, and ``0 * inf`` is NaN), and both paths share
+:func:`minplus_fused`, so they agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.tropical import BIG
+
+
+def minplus_fused(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused min-plus convolution, (rows, K) x (rows, K) -> (rows, K).
+
+    The j-shift reduction unrolled over the (static) budget width so XLA
+    keeps everything in one elementwise loop — no (rows, K, K) candidate
+    tensor is ever materialized. Identical candidate order on every
+    backend, hence bit-identical results.
+    """
+    rows, k = a.shape
+    acc = a + b[:, :1]
+    for j in range(1, k):
+        shifted = jnp.concatenate(
+            [jnp.full((rows, j), BIG, a.dtype), a[:, : k - j]], axis=1)
+        acc = jnp.minimum(acc, shifted + b[:, j : j + 1])
+    return acc
+
+
+def chain_fold(st: jax.Array, collect: bool = False):
+    """Fold a stack of row-batches through the min-plus chain.
+
+    ``st``: (max_c, R, K) — child 0 first. Returns the final accumulator
+    (R, K), plus (when ``collect=True``) the full (max_c, R, K) prefix
+    stack (partial chains, needed by the color traceback's mSplit
+    replay). One lax.scan over the child index: identical fold order to
+    an unrolled loop — hence bit-identical results everywhere this chain
+    is spelled — at O(max_c) smaller HLO. This is the single definition
+    the gather fold and the on-device color both call; keep it that way,
+    the bit-identical-mask guarantee rides on it.
+    """
+    def fold(acc, ch):
+        y = minplus_fused(acc, ch)
+        return y, y
+
+    last, partials = jax.lax.scan(fold, st[0], st[1:])
+    if not collect:
+        return last
+    return last, jnp.concatenate([st[:1], partials], axis=0)
+
+
+def _minplus_loop(a: jax.Array, b: jax.Array) -> jax.Array:
+    """minplus_fused spelled as a fori_loop (for kernel bodies).
+
+    Identical candidate order and BIG shift padding — bit-identical
+    results — but O(1) HLO in the budget width, so lane-padded kernels
+    don't pay a 128-step unroll at trace time.
+    """
+    rows, kk = a.shape
+    a_pad = jnp.concatenate([jnp.full((rows, kk), BIG, a.dtype), a], axis=1)
+
+    def body(j, acc):
+        seg = jax.lax.dynamic_slice(a_pad, (0, kk - j), (rows, kk))
+        bj = jax.lax.dynamic_slice(b, (0, j), (rows, 1))
+        return jnp.minimum(acc, seg + bj)
+
+    return jax.lax.fori_loop(1, kk, body, a + b[:, :1])
+
+
+def _fold_math(xs, xb, kid, load, send, avail, rho, nl, kcap):
+    """Shared recurrence body: chain children, apply red/blue, cummin.
+
+    xs:   (C, nl, kcap) child-level tables at rows 1..nl, all-zeros
+          identity appended at index C-1
+    xb:   (C, kcap)     the same at row 1 (the blue chain operand)
+    kid:  (W, max_c) int32 child-level-local indices (sentinel = C-1)
+    load, send: (W,) float; avail: (W,) bool; rho: (W, nl) float
+    returns (W, nl, kcap)
+    """
+    w, max_c = kid.shape
+    dt = xs.dtype
+    acc_r = jnp.take(xs, kid[:, 0], axis=0)            # (W, nl, kcap)
+    acc_b = jnp.take(xb, kid[:, 0], axis=0)            # (W, kcap)
+    for m in range(1, max_c):
+        ch_r = jnp.take(xs, kid[:, m], axis=0)
+        ch_b = jnp.take(xb, kid[:, m], axis=0)
+        # one fused convolution over all (v, ell) rows + the blue rows
+        a = jnp.concatenate([acc_r.reshape(-1, kcap), acc_b])
+        b = jnp.concatenate([ch_r.reshape(-1, kcap), ch_b])
+        y = _minplus_loop(a, b)
+        acc_r = y[: w * nl].reshape(w, nl, kcap)
+        acc_b = y[w * nl :]
+    rl = rho[:, :, None]                               # (W, nl, 1)
+    red = acc_r + load[:, None, None] * rl
+    # blue: budget shifts by one (v spends a slot on itself)
+    blue = jnp.concatenate(
+        [jnp.full((w, nl, 1), BIG, dt),
+         acc_b[:, None, :-1] + send[:, None, None] * rl], axis=-1)
+    blue = jnp.where(avail[:, None, None], blue, BIG)
+    out = jnp.minimum(red, blue)
+    return jax.lax.cummin(out, axis=2)                 # at-most-k monotone
+
+
+def level_fold_jnp(xs, xb, kid, load, send, avail, rho, *, nl: int,
+                  kcap: int):
+    """Fused-jnp level fold — batched :func:`_fold_math` math, spelled with
+    ``take_along_axis`` over the leading batch axis (cheaper for XLA:CPU to
+    compile than a vmapped per-instance body).
+
+    xs: (B, C, nl, kcap) the child level's tables at rows 1..nl, identity
+    (all-zeros) appended at index C-1; xb: (B, C, kcap) the same at row 1
+    (the blue-chain operand); kid: (B, W, max_c) *child-level-local*
+    indices (sentinel C-1); load, send: (B, W); avail: (B, W) bool; rho:
+    (B, W, nl). Returns the level's internal block values,
+    (B, W, nl, kcap).
+    """
+    B, W, max_c = kid.shape
+    dt = xs.dtype
+    # gather every child's red rows + blue row in one go: (B, W, max_c, ...)
+    g_r = jnp.take_along_axis(xs, kid.reshape(B, -1)[:, :, None, None],
+                              axis=1).reshape(B, W, max_c, nl, kcap)
+    g_b = jnp.take_along_axis(xb, kid.reshape(B, -1)[:, :, None],
+                              axis=1).reshape(B, W, max_c, kcap)
+    rows_r = jnp.moveaxis(g_r, 2, 0).reshape(max_c, B * W * nl, kcap)
+    rows_b = jnp.moveaxis(g_b, 2, 0).reshape(max_c, B * W, kcap)
+    chs = jnp.concatenate([rows_r, rows_b], axis=1)    # (max_c, R, kcap)
+    acc = chain_fold(chs)
+    acc_r = acc[: B * W * nl].reshape(B, W, nl, kcap)
+    acc_b = acc[B * W * nl :].reshape(B, W, kcap)
+    rl = rho[..., None]                                # (B, W, nl, 1)
+    red = acc_r + load[:, :, None, None] * rl
+    blue = jnp.concatenate(
+        [jnp.full((B, W, nl, 1), BIG, dt),
+         acc_b[:, :, None, :-1] + send[:, :, None, None] * rl], axis=-1)
+    blue = jnp.where(avail[:, :, None, None], blue, BIG)
+    out = jnp.minimum(red, blue)
+    return jax.lax.cummin(out, axis=3)                 # at-most-k monotone
+
+
+def _levelfold_kernel(xs_ref, xb_ref, kid_ref, load_ref, send_ref,
+                      avail_ref, rho_ref, o_ref, *, nl: int, kcap: int):
+    out = _fold_math(
+        xs_ref[0], xb_ref[0], kid_ref[0], load_ref[0],
+        send_ref[0], avail_ref[0] > 0, rho_ref[0], nl, kcap)
+    o_ref[0] = out
+
+
+LANE = 128
+
+
+def level_fold_pallas(xs, xb, kid, load, send, avail, rho, *, nl: int,
+                      kcap: int, interpret: bool = False):
+    """One-launch-per-level Pallas fold; same contract as level_fold_jnp.
+
+    Grid is the batch: each step holds one instance's child-level table
+    block in VMEM, gathers child rows from it and chains the convolutions
+    without writing partials back to HBM. The budget axis is padded to
+    the 128-lane boundary with BIG (same discipline as ops.minplus —
+    min-plus output column i only reads operand columns <= i, so BIG
+    lanes never leak into the real prefix) and sliced back after.
+    """
+    B, C, _, _ = xs.shape
+    _, W, max_c = kid.shape
+    dt = xs.dtype
+    kp = ((kcap + LANE - 1) // LANE) * LANE
+    xs = jnp.pad(xs, ((0, 0), (0, 0), (0, 0), (0, kp - kcap)),
+                 constant_values=BIG)
+    xb = jnp.pad(xb, ((0, 0), (0, 0), (0, kp - kcap)), constant_values=BIG)
+
+    def bspec(shape):
+        return pl.BlockSpec((1, *shape), lambda b: (b,) + (0,) * len(shape))
+
+    out = pl.pallas_call(
+        functools.partial(_levelfold_kernel, nl=nl, kcap=kp),
+        grid=(B,),
+        in_specs=[bspec((C, nl, kp)), bspec((C, kp)), bspec((W, max_c)),
+                  bspec((W,)), bspec((W,)), bspec((W,)), bspec((W, nl))],
+        out_specs=bspec((W, nl, kp)),
+        out_shape=jax.ShapeDtypeStruct((B, W, nl, kp), dt),
+        interpret=interpret,
+    )(xs, xb, kid, load, send, avail.astype(jnp.int32), rho)
+    return out[..., :kcap]
+
+
+def level_fold(xs, xb, kid, load, send, avail, rho, *, nl: int, kcap: int,
+               use_pallas: bool = False, interpret: bool = False):
+    """Backend dispatch for the fused level fold (see module docstring)."""
+    if use_pallas:
+        return level_fold_pallas(xs, xb, kid, load, send, avail, rho,
+                                 nl=nl, kcap=kcap, interpret=interpret)
+    return level_fold_jnp(xs, xb, kid, load, send, avail, rho,
+                          nl=nl, kcap=kcap)

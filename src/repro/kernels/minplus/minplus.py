@@ -8,30 +8,25 @@ SOAR-Gather's mCost inner loop (paper Alg. 3 lines 30-34) is, for every
 The level-synchronous gather batches all (node, ell) rows of a tree level;
 this kernel tiles the batch into VMEM blocks and runs the j-shift reduction
 on the VPU. Budget width K is padded to the 128-lane boundary by ops.py.
+
+Infeasible shift positions and lane padding use the finite ``BIG``
+sentinel from ``repro.core.tropical`` — the same stand-in the engine's
+fused jnp path runs on — so ``0 * pad`` can never go NaN and the
+interpret-mode kernel matches the fused path bit-for-bit.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .levelfold import _minplus_loop
+
+
 def _minplus_kernel(a_ref, b_ref, o_ref):
-    a = a_ref[...]                       # (TB, K)
-    b = b_ref[...]                       # (TB, K)
-    tb, k = a.shape
-    inf = float("inf")
-    pad = jnp.full((tb, k), inf, a.dtype)
-    a_pad = jnp.concatenate([pad, a], axis=1)      # (TB, 2K)
-
-    def body(j, acc):
-        seg = jax.lax.dynamic_slice(a_pad, (0, k - j), (tb, k))
-        bj = jax.lax.dynamic_slice(b, (0, j), (tb, 1))
-        return jnp.minimum(acc, seg + bj)
-
-    o_ref[...] = jax.lax.fori_loop(0, k, body,
-                                   jnp.full((tb, k), inf, a.dtype))
+    # one shared definition of the BIG-padded j-shift reduction (also the
+    # level-fold kernel's inner loop) — candidate order is what keeps the
+    # kernels bit-identical to the fused jnp path
+    o_ref[...] = _minplus_loop(a_ref[...], b_ref[...])
 
 
 def minplus_pallas(a: jax.Array, b: jax.Array, block_rows: int = 128,

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.tropical import BIG
 from .minplus import minplus_pallas
 from .ref import minplus_ref
 
@@ -29,8 +30,8 @@ def minplus(a: jax.Array, b: jax.Array, interpret: bool = True,
     kp = ((k + LANE - 1) // LANE) * LANE
     dt = a.dtype
     af = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, kp - k)),
-                 constant_values=jnp.inf)
+                 constant_values=BIG)
     bf = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, kp - k)),
-                 constant_values=jnp.inf)
+                 constant_values=BIG)
     out = minplus_pallas(af, bf, interpret=interpret)
     return out[:, :k].astype(dt)

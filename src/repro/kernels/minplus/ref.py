@@ -1,5 +1,12 @@
-"""Pure-jnp oracle for the batched min-plus convolution."""
+"""Pure-jnp oracle for the batched min-plus convolution.
+
+Infeasible split positions carry the finite ``BIG`` sentinel (shared with
+the kernel and the engine's fused path) rather than ``inf``, so all three
+implementations saturate identically.
+"""
 import jax.numpy as jnp
+
+from ...core.tropical import BIG
 
 
 def minplus_ref(a, b):
@@ -10,5 +17,5 @@ def minplus_ref(a, b):
     gather = jnp.where(i - j >= 0, i - j, 0)
     a_shift = a[:, gather]                          # (rows, K, K): a[i-j]
     cand = a_shift + b[:, None, :]
-    cand = jnp.where((i - j >= 0)[None], cand, jnp.inf)
+    cand = jnp.where((i - j >= 0)[None], cand, BIG)
     return cand.min(axis=-1)

@@ -160,6 +160,18 @@ class Orchestrator:
             progs.append(prog)
         return progs
 
+    def engine_cache_stats(self) -> dict:
+        """Placement-engine compile/packing cache telemetry.
+
+        Batched replanning (``begin_workloads`` / ``preplan_failures``)
+        leans on the engine's jit cache: the layout-bucketed Forest
+        packing maps the orchestrator's recurring scenario shapes onto a
+        handful of compiled executables. Surface the counters so
+        operators can verify steady-state serving isn't recompiling.
+        """
+        from ..engine import cache_stats
+        return cache_stats()
+
     def preplan_failures(
         self, failure_sets: list[list[int]]
     ) -> list[tuple[np.ndarray, float]]:
@@ -167,7 +179,8 @@ class Orchestrator:
 
         Builds the effective topology of every scenario and solves them
         all in one batched engine call (same tree shape -> one compiled
-        executable). Returns ``[(blue, utilization)]`` per scenario; the
+        executable; the device-resident solve returns just the masks and
+        costs). Returns ``[(blue, utilization)]`` per scenario; the
         orchestrator can stash these to make real recovery a table lookup.
         """
         topos = []

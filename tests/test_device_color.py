@@ -1,0 +1,123 @@
+"""On-device SOAR-Color vs host color_batch vs serial soar — bit-identical.
+
+The device traceback re-derives every budget split from the resident DP
+tables with the serial solver's exact tie-breaking, so its blue masks must
+equal the host replay and the serial reference *bit-for-bit*, not
+approximately. Instances use dyadic rho (multiples of 1/8) so the engine's
+float32 tables agree exactly with the float64 references (see
+engine/batched.py numerics note).
+"""
+import numpy as np
+
+from repro.core.forest import build_forest, layout_key
+from repro.core.soar import soar
+from repro.core.tree import DEST, Tree
+from repro.engine import (cache_stats, color_batch, gather_batch,
+                          solve_forest)
+from repro.testing import given, settings, st
+
+
+@st.composite
+def forest_instances(draw, max_b=4, max_n=14):
+    """Ragged random forests with dyadic rates and partial availability."""
+    B = draw(st.integers(1, max_b))
+    trees, loads, avails = [], [], []
+    for _ in range(B):
+        n = draw(st.integers(1, max_n))
+        parent = [DEST] + [draw(st.integers(0, v - 1)) for v in range(1, n)]
+        rho = [draw(st.integers(1, 31)) / 8.0 for _ in range(n)]  # dyadic
+        trees.append(Tree(np.array(parent), np.array(rho)))
+        loads.append(np.array([draw(st.integers(0, 6)) for _ in range(n)],
+                              np.int64))
+        avails.append(np.array([draw(st.booleans()) for _ in range(n)],
+                               bool))
+    return trees, loads, avails
+
+
+@settings(max_examples=12, deadline=None)
+@given(forest_instances())
+def test_device_color_bit_identical(inst):
+    """k in {0, 1, n}: device masks == host color_batch == serial soar."""
+    trees, loads, avails = inst
+    n_max = max(t.n for t in trees)
+    f = build_forest(trees, loads, avails)
+    for k in sorted({0, 1, n_max}):
+        dev = solve_forest(f, k)
+        host = solve_forest(f, k, debug_tables=True)
+        assert np.array_equal(dev.blue, host.blue)       # bit-identical
+        assert np.array_equal(dev.costs, host.costs)
+        for b, t in enumerate(trees):
+            ref = soar(t, loads[b], k, avail=avails[b])
+            assert np.array_equal(dev.blue_of(b), ref.blue)
+            assert dev.costs[b] == ref.cost
+
+
+def test_budget_cap_is_exact():
+    """Capped (per-level truncated) and uncapped gathers agree bit-for-bit."""
+    rng = np.random.default_rng(17)
+    trees, loads, avails = [], [], []
+    for _ in range(6):
+        n = int(rng.integers(2, 20))
+        parent = np.full(n, DEST, np.int32)
+        for v in range(1, n):
+            parent[v] = int(rng.integers(0, v))
+        trees.append(Tree(parent, rng.integers(1, 32, size=n) / 8.0))
+        loads.append(rng.integers(0, 7, size=n))
+        avails.append(rng.random(n) < 0.6)
+    f = build_forest(trees, loads, avails)
+    for k in (1, 4, 9):
+        capped = solve_forest(f, k, cap=True)
+        full = solve_forest(f, k, cap=False)
+        assert np.array_equal(capped.costs, full.costs)
+        assert np.array_equal(capped.blue, full.blue)
+
+
+def test_debug_tables_escape_hatch():
+    """debug_tables=True reproduces the PR 1 path: full tables on host,
+    host-numpy color, and a correspondingly larger device->host bill."""
+    rng = np.random.default_rng(3)
+    n, B, k = 22, 5, 4
+    parent = np.full(n, DEST, np.int32)
+    for v in range(1, n):
+        parent[v] = int(rng.integers(0, v))
+    t = Tree(parent, rng.integers(1, 32, size=n) / 8.0)
+    loads = [rng.integers(0, 7, size=n) for _ in range(B)]
+    f = build_forest([t] * B, loads)
+    dbg = solve_forest(f, k, debug_tables=True)
+    dev = solve_forest(f, k)
+    # the hatch exposes node-indexed tables identical to gather_batch, and
+    # host color over them equals the device traceback
+    assert dbg.tables is not None
+    assert dbg.tables.shape == (B, f.n_max + 1, f.h_max + 2, k + 1)
+    np.testing.assert_array_equal(dbg.tables, gather_batch(f, k))
+    assert np.array_equal(color_batch(f, dbg.tables, k), dev.blue)
+    assert np.array_equal(dbg.blue, dev.blue)
+    # the default path never pulls tables: masks + costs only
+    assert dev.tables is None
+    assert dev.bytes_to_host == dev.blue.nbytes + 4 * B   # masks + f32 costs
+    assert dbg.bytes_to_host > 16 * dev.bytes_to_host
+
+
+def test_layout_bucketing_collapses_jit_keys():
+    """Ragged star fleets share bucketed layouts (and hence jit entries)."""
+    def star(m):
+        return Tree(np.array([DEST] + [0] * m, np.int32), np.ones(m + 1))
+
+    bucketed, exact = set(), set()
+    for m in range(3, 9):
+        tr, load = star(m), np.r_[np.zeros(1, np.int64), np.ones(m, np.int64)]
+        bucketed.add(layout_key(build_forest([tr], [load])))
+        exact.add(layout_key(build_forest([tr], [load], bucket=False)))
+    assert len(exact) == 6                    # every star is its own layout
+    assert len(bucketed) < len(exact)         # buckets collapse the fleet
+    stats = cache_stats()
+    assert stats["forests_built"] >= 12
+    assert 0 < stats["distinct_layouts"] <= stats["forests_built"]
+    # solving two different-m stars through one bucketed layout still gives
+    # per-instance exact results
+    for m in (5, 7):
+        load = np.r_[np.zeros(1, np.int64), np.ones(m, np.int64)]
+        res = solve_forest(build_forest([star(m)], [load]), 2)
+        ref = soar(star(m), load, 2)
+        assert res.costs[0] == ref.cost
+        assert np.array_equal(res.blue_of(0), ref.blue)
