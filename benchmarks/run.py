@@ -11,9 +11,10 @@ import argparse
 import sys
 import time
 
-from . import (beyond_bottleneck, beyond_budget, engine_throughput,
-               fig6_strategies, fig7_online, fig8_usecases, fig9_runtime,
-               fig10_scaling, fig11_scalefree, paper_claims)
+from . import (beyond_bottleneck, beyond_budget, congestion,
+               engine_throughput, fig6_strategies, fig7_online,
+               fig8_usecases, fig9_runtime, fig10_scaling, fig11_scalefree,
+               paper_claims)
 
 BENCHES = [
     ("paper_claims (Figs 1-3 + brute-force optimality)", paper_claims.run, {}),
@@ -25,6 +26,8 @@ BENCHES = [
     ("fig11_scalefree", fig11_scalefree.run, {}),
     ("engine_throughput (batched vs serial placement)",
      engine_throughput.run, {}),
+    ("congestion (driver vs utilization-only placement)",
+     congestion.run, {}),
     ("beyond_bottleneck (paper §8 conjecture)", beyond_bottleneck.run, {}),
     ("beyond_budget (paper §8 open problem 2)", beyond_budget.run, {}),
 ]
@@ -38,6 +41,7 @@ FAST_OVERRIDES = {
     "fig10_scaling": dict(reps=1, sizes=(256, 512, 1024)),
     "fig11_scalefree": dict(reps=2, sizes=(256, 512, 1024)),
     "engine_throughput": dict(reps=2, batches=(8, 64)),
+    "congestion (": dict(tenants=(8,), max_rounds=4, reps=1),
 }
 
 

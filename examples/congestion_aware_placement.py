@@ -1,0 +1,54 @@
+"""Congestion-aware multi-tenant placement (Segal et al. 2022 objective).
+
+T tenants share one datacenter reduction tree. Each tenant's SOAR placement
+is individually utilization-optimal, but independently optimal placements
+pile messages onto the same links — the *max-link congestion* across the
+fleet can be far above what a coordinated assignment achieves. The
+repeated-solve congestion driver (`repro.engine.solve_congestion`)
+re-solves the whole tenant batch under penalty-reweighted link rates until
+the hottest link stops improving, keeping the best (max-congestion, total
+utilization) placement seen.
+
+Run:  python examples/congestion_aware_placement.py
+      (or PYTHONPATH=src python examples/congestion_aware_placement.py from
+       a source checkout without `pip install -e .`)
+"""
+import numpy as np
+
+from repro.core import bt, phi
+from repro.core.tree import sample_load
+from repro.engine import solve_batch, solve_congestion
+
+N_TOTAL = 128      # BT(128) datacenter tree
+K = 8              # per-tenant blue budget
+T = 16             # tenants sharing the tree
+
+t = bt(N_TOTAL, "constant")
+loads = [sample_load(t, "power-law", seed=s) for s in range(T)]
+
+res = solve_congestion(t, loads, K, record_rounds=True)
+
+print(f"BT({N_TOTAL}), {T} tenants, k={K}, power-law loads\n")
+print(f"{'round':<6} {'max-link congestion':<20}")
+for r, cmax in enumerate(res.history):
+    tag = "  <- best" if r == res.best_round else ""
+    print(f"{r:<6} {cmax:<20.0f}{tag}")
+
+base = solve_batch([t] * T, loads, K)
+util_only = base.costs.sum()
+print(f"\nmax-link congestion: {res.baseline_max:.0f} (utilization-only) "
+      f"-> {res.max_congestion:.0f} "
+      f"({100 * res.improvement:.1f}% reduction, {res.rounds} rounds)")
+print(f"total utilization:   {util_only:.1f} (utilization-only) "
+      f"-> {res.costs.sum():.1f} "
+      f"(+{100 * (res.costs.sum() / util_only - 1):.2f}% — the price of "
+      "spreading)")
+
+# every per-tenant placement is still a valid budget-k SOAR placement,
+# costed on the ORIGINAL rho
+for ti, L in enumerate(loads):
+    assert res.blue[ti].sum() <= K
+    assert res.costs[ti] == phi(t, L, res.blue[ti])
+print("\nEach tenant keeps a valid (at most k blue) placement; the driver "
+      "trades a few\npercent of summed utilization for a much cooler "
+      "hottest link.")

@@ -150,6 +150,9 @@ def plan_batch(topos: list[ClusterTopology], k: int,
     if not topos:
         return []
     avails = [None] * len(topos) if avails is None else list(avails)
+    if len(avails) != len(topos):
+        raise ValueError(f"{len(avails)} avail masks for {len(topos)} "
+                         f"topologies — plan_batch pairs them positionally")
     if strategy == "soar":
         if not engine_kw.get("color", True):
             raise ValueError("plan_batch builds programs from blue masks; "
@@ -167,6 +170,39 @@ def plan_batch(topos: list[ClusterTopology], k: int,
     else:
         fn = baselines.STRATEGIES[strategy]
         blues = [fn(tp.tree, tp.load, k, avail=av)
-                 for tp, av in zip(topos, avails)]
+                 for tp, av in zip(topos, avails, strict=True)]
     return [(blue, build_program(tp, blue))
-            for tp, blue in zip(topos, blues)]
+            for tp, blue in zip(topos, blues, strict=True)]
+
+
+def plan_congestion(topo: ClusterTopology, k: int,
+                    loads: list[np.ndarray] | None = None,
+                    count: int | None = None,
+                    avails: list[np.ndarray | None] | np.ndarray | None = None,
+                    **driver_kw):
+    """Congestion-aware multi-tenant planning on one shared cluster tree.
+
+    Runs the repeated-solve penalty driver
+    (:func:`repro.engine.solve_congestion`) for T tenants sharing
+    ``topo.tree`` — minimizing the *max-link* congestion across tenants
+    instead of each tenant's utilization in isolation — then compiles one
+    :class:`ReduceProgram` per tenant from the final masks. ``loads`` is
+    one per-tenant load vector (or pass ``count`` to admit that many
+    copies of ``topo.load`` — the orchestrator's admission shape);
+    ``avails`` is a shared mask or a per-tenant list. Driver keyword
+    arguments (``max_rounds``, ``alpha``, ``rho_weighted``, …) pass
+    through. Returns ``([(blue, program)], CongestionResult)`` — the
+    programs in tenant order, the result carrying the congestion
+    diagnostics (baseline vs achieved max/mean, rounds, history).
+    """
+    if (loads is None) == (count is None):
+        raise ValueError("pass exactly one of loads / count")
+    if loads is None:
+        loads = [topo.load] * count
+    from ..engine import solve_congestion
+    res = solve_congestion(topo.tree, loads, k, avail=avails, **driver_kw)
+    planned = []
+    for L, blue in zip(loads, res.blue, strict=True):
+        tenant_topo = dataclasses.replace(topo, load=np.asarray(L, np.int64))
+        planned.append((blue, build_program(tenant_topo, blue)))
+    return planned, res

@@ -92,11 +92,20 @@ def fail_devices(topo: ClusterTopology, dead: list[int]) -> ClusterTopology:
 
     Dead chips stop producing messages; switches whose whole subtree died
     still exist but carry zero load (SOAR then never wastes budget there —
-    the zero-load refinement of DESIGN.md §8).
+    the zero-load refinement of DESIGN.md §8). Duplicate ids in ``dead``
+    are collapsed to one failure; a device that is already failed in
+    ``topo`` (``device_leaf[d] == -1``) raises — its leaf's load was
+    already released, and ``load[-1]`` would silently drain the *last*
+    switch's load instead.
     """
     load = topo.load.copy()
     device_leaf = topo.device_leaf.copy()
-    for d in dead:
+    for d in dict.fromkeys(int(d) for d in dead):     # dedupe, keep order
+        if not 0 <= d < len(device_leaf):
+            raise ValueError(f"device {d} out of range "
+                             f"[0, {len(device_leaf)})")
+        if device_leaf[d] < 0:
+            raise ValueError(f"device {d} is already failed")
         load[device_leaf[d]] -= 1
         device_leaf[d] = -1
     return ClusterTopology(tree=topo.tree, device_leaf=device_leaf, load=load)

@@ -3,10 +3,14 @@
 ``solve_batch(trees, loads, k, avail)`` solves B phi-BIC instances in one
 device-resident level-synchronous JAX sweep — fused level-fold gather plus
 on-device traceback; only masks and costs leave the accelerator (see
-``batched.py``). The serial per-instance solvers stay in ``repro.core``.
+``batched.py``). ``solve_congestion`` iterates that solve under penalty-
+reweighted link rates to minimize *max-link congestion* across tenants
+sharing one tree (see ``congestion.py``). The serial per-instance solvers
+stay in ``repro.core``.
 """
 from .batched import (BatchResult, cache_stats, color_batch, gather_batch,
                       solve_batch, solve_forest)
+from .congestion import CongestionResult, solve_congestion
 
-__all__ = ["BatchResult", "cache_stats", "color_batch", "gather_batch",
-           "solve_batch", "solve_forest"]
+__all__ = ["BatchResult", "CongestionResult", "cache_stats", "color_batch",
+           "gather_batch", "solve_batch", "solve_congestion", "solve_forest"]

@@ -1,0 +1,193 @@
+"""Congestion-aware multi-tenant placement: a repeated-solve driver.
+
+SOAR (and :func:`repro.engine.solve_batch`) minimizes each tenant's *own*
+utilization; with T tenants on one shared reduction tree the independently
+optimal placements pile messages onto the same links. Following the
+congestion objective of Segal et al. 2022 (*Constrained In-network
+Computing with Low Congestion in Datacenter Networks*), this driver
+minimizes the **max-link congestion**
+
+    C_max = max_e sum_t msg_e^t        (optionally time-weighted by rho_e)
+
+by iterated penalty reweighting on top of the device-resident engine:
+
+  1. solve all T tenants batched — one :func:`~repro.engine.solve_forest`
+     call; same tree shape every round, so the layout-bucketed Forest maps
+     every round onto **one** compiled executable;
+  2. measure per-link traffic from the blue masks with the batched
+     level sweep :func:`repro.core.congestion.messages_up_forest`
+     (bit-identical to the host ``messages_up``);
+  3. multiplicatively boost each tenant's *effective* rho on overloaded
+     links, proportionally to that tenant's own contribution — the tenants
+     responsible for a hotspot are the ones re-routed away from it; a
+     deterministic per-tenant penalty gradient (``alpha_t`` ramps with the
+     tenant index) breaks ties between look-alike tenants, so identical
+     workloads spread instead of migrating in lockstep;
+  4. re-solve on the reweighted rho and keep the best placement seen
+     (lexicographically: max congestion, then total utilization — the loop
+     is monotone-best, never worse than the utilization-only baseline).
+
+Weights are quantized to a dyadic grid (multiples of ``1/1024``), so on
+dyadic-rho trees every round's effective rho stays exactly representable
+in float32 and the batched solve is **bit-identical** to the serial
+:func:`repro.core.soar.soar` on the same reweighted instance (asserted in
+``tests/test_congestion.py``). Utilization and congestion are always
+reported against the *original* rho — the penalties shape the search, not
+the objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from ..core.congestion import (congestion_profile, measure_fleet,
+                               messages_up_forest)
+from ..core.forest import build_forest
+from ..core.tree import Tree
+from .batched import solve_forest
+
+#: weights are rounded to this dyadic grid so effective rho stays exactly
+#: float32-representable on dyadic-rho trees (bit-identical engine/serial)
+W_QUANTUM = 1.0 / 1024.0
+
+
+@dataclasses.dataclass
+class CongestionResult:
+    """Best placement found by :func:`solve_congestion` plus diagnostics."""
+
+    blue: np.ndarray          # (T, n) bool — best per-tenant masks
+    costs: np.ndarray         # (T,) float64 — utilization on the ORIGINAL rho
+    msgs: np.ndarray          # (T, n) int64 per-tenant per-link messages
+    congestion: np.ndarray    # (n,) per-link congestion of the best round
+    max_congestion: float     # C_max of the best round
+    mean_congestion: float    # mean over links carrying traffic
+    baseline_max: float       # round 0 = utilization-only solve_batch
+    baseline_mean: float
+    rounds: int               # solve rounds actually run (incl. round 0)
+    best_round: int
+    history: list             # per-round C_max
+    rounds_log: list | None = None   # [(rho_eff (T,n), blue (T,n))] when
+                                     # record_rounds=True (parity testing)
+
+    @property
+    def improvement(self) -> float:
+        """Relative max-congestion reduction vs the utilization-only plan."""
+        if self.baseline_max <= 0:
+            return 0.0
+        return 1.0 - self.max_congestion / self.baseline_max
+
+
+def _quantize(w: np.ndarray, cap: float) -> np.ndarray:
+    return np.minimum(np.round(w / W_QUANTUM) * W_QUANTUM, cap)
+
+
+def solve_congestion(
+    tree: Tree,
+    loads: Sequence[np.ndarray],
+    k: int,
+    avail: Sequence[np.ndarray | None] | np.ndarray | None = None,
+    *,
+    max_rounds: int = 8,
+    patience: int = 2,
+    alpha: float = 2.0,
+    hot_frac: float = 0.75,
+    w_cap: float = 8.0,
+    rho_weighted: bool = False,
+    record_rounds: bool = False,
+    **engine_kw,
+) -> CongestionResult:
+    """Minimize max-link congestion for T tenants sharing ``tree``.
+
+    ``loads``: one (n,) load vector per tenant. ``avail``: a single mask
+    shared by all tenants, a per-tenant sequence, or None. ``alpha``
+    scales the penalty (each tenant t uses a deterministic ramp
+    ``alpha * (1 + t/(T-1))`` — the symmetry breaker for identical
+    tenants); links hotter than ``hot_frac * C_max`` are penalized;
+    per-link weights are capped at ``w_cap`` and quantized to
+    :data:`W_QUANTUM`. ``rho_weighted=True`` measures congestion in
+    transmission time (``msg * rho``) instead of raw message counts.
+    Engine keywords (``dtype``, ``use_pallas``, ``cap``, …) pass through
+    to :func:`~repro.engine.solve_forest`. Runs at most ``max_rounds``
+    solves, stopping early after ``patience`` rounds without improvement;
+    the returned placement is the best round seen, so the result is never
+    worse than the utilization-only baseline (round 0).
+    """
+    T = len(loads)
+    if T == 0:
+        raise ValueError("solve_congestion needs at least one tenant")
+    if max_rounds < 1:
+        raise ValueError("max_rounds must be >= 1")
+    if not engine_kw.get("color", True):
+        raise ValueError("solve_congestion needs blue masks; color=False "
+                         "(costs-only mode) is not usable here")
+    n = tree.n
+    rho0 = tree.rho
+    cong_w = rho0 if rho_weighted else None
+    if avail is None or isinstance(avail, np.ndarray):
+        avails = [avail] * T
+    else:
+        avails = list(avail)
+        if len(avails) != T:
+            raise ValueError(f"{len(avails)} avail masks for {T} tenants")
+    # per-tenant penalty ramp: deterministic symmetry breaker
+    alpha_t = alpha * (1.0 + (np.arange(T) / max(1, T - 1)))[:, None]
+
+    w = np.ones((T, n))
+    best = None                       # (cmax, total_util, round, state...)
+    history: list[float] = []
+    rounds_log: list | None = [] if record_rounds else None
+    prof0 = None                      # round-0 per-link profile (baseline)
+    stale = 0
+    rounds = 0
+    for r in range(max_rounds):
+        if r == 0:
+            trees = [tree] * T
+            rho_eff = np.broadcast_to(rho0, (T, n))
+        else:
+            rho_eff = rho0[None, :] * w
+            trees = [Tree(tree.parent, rho_eff[t]) for t in range(T)]
+        f = build_forest(trees, list(loads), avails)
+        res = solve_forest(f, k, **engine_kw)
+        blue = res.blue[:, :n].copy()
+        msgs = messages_up_forest(f, res.blue)[:, :n]
+        prof = congestion_profile(msgs, cong_w)
+        cmax = float(prof.max())
+        util = (msgs * rho0).sum(axis=1).astype(np.float64)
+        history.append(cmax)
+        rounds = r + 1
+        if r == 0:
+            prof0 = prof
+        if record_rounds:
+            rounds_log.append((np.array(rho_eff, np.float64), blue.copy()))
+        key = (cmax, float(util.sum()))
+        if best is None or key < best[0]:
+            best = (key, r, blue)
+            stale = 0
+        else:
+            stale += 1
+        if cmax == 0 or stale >= patience:
+            break
+        # penalty reweight: boost each tenant's effective rho on hot links
+        # in proportion to that tenant's own traffic share of the hotspot
+        hot = prof >= hot_frac * cmax
+        contrib = (msgs * cong_w if cong_w is not None else msgs) / cmax
+        boost = 1.0 + alpha_t * np.where(hot[None, :], contrib, 0.0)
+        w = _quantize(w * boost, w_cap)
+
+    _, best_round, blue = best
+    # the reported statistics come from the one shared measurement recipe
+    # (measure_fleet — same code path the orchestrator's post-admission
+    # re-measure uses); its host sweep is bit-identical to the device
+    # messages the loop tracked, so nothing shifts in the hand-off
+    m = measure_fleet(tree, list(loads), list(blue), rho_weighted)
+    base0 = prof0[prof0 > 0]
+    return CongestionResult(
+        blue=blue, costs=m.costs, msgs=m.msgs, congestion=m.congestion,
+        max_congestion=m.max_congestion,
+        mean_congestion=m.mean_congestion,
+        baseline_max=float(history[0]),
+        baseline_mean=float(base0.mean()) if base0.size else 0.0,
+        rounds=rounds, best_round=best_round, history=history,
+        rounds_log=rounds_log)

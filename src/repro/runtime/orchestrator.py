@@ -19,7 +19,7 @@ import dataclasses
 import numpy as np
 
 from ..collectives.schedule import (ReduceProgram, build_program, plan,
-                                    plan_batch)
+                                    plan_batch, plan_congestion)
 from ..collectives.topology import ClusterTopology, fail_devices
 from .stragglers import StragglerPolicy, StragglerReport
 
@@ -54,6 +54,8 @@ class Orchestrator:
         self.utilization_history: list[float] = []
         self.blue: np.ndarray | None = None
         self.program: ReduceProgram | None = None
+        self.last_congestion = None   # CongestionResult of the most recent
+                                      # congestion-aware admission
         self._replace()
 
     # -- properties ----------------------------------------------------------
@@ -90,13 +92,26 @@ class Orchestrator:
 
     # -- event handlers -------------------------------------------------------
     def on_failure(self, devices: list[int]) -> ReduceProgram:
-        """Hard failure: chips stop producing gradient messages."""
+        """Hard failure: chips stop producing gradient messages.
+
+        Validates every id before touching any state (and collapses
+        duplicates), so a bad id mid-list cannot leave the orchestrator
+        half-applied — same discipline as :meth:`on_recover` and
+        :func:`~repro.collectives.topology.fail_devices`.
+        """
+        devices = list(dict.fromkeys(int(d) for d in devices))
         for d in devices:
+            if not 0 <= d < len(self.alive):
+                raise ValueError(f"device {d} out of range "
+                                 f"[0, {len(self.alive)})")
             if not self.alive[d]:
                 raise ValueError(f"device {d} already dead")
-            self.alive[d] = False
-        if self.n_alive == 0:
+        # quarantined devices don't count towards n_alive, so only the
+        # non-quarantined failures reduce it — reject before mutating
+        if sum(1 for d in devices if not self.quarantined[d]) >= self.n_alive:
             raise RuntimeError("all devices failed")
+        for d in devices:
+            self.alive[d] = False
         self.topo = self._effective_topo()
         self._replace()
         return self.program
@@ -112,7 +127,19 @@ class Orchestrator:
         return report
 
     def on_recover(self, devices: list[int]) -> ReduceProgram:
-        """A replaced/recovered chip rejoins the reduction tree."""
+        """A replaced/recovered chip rejoins the reduction tree.
+
+        Only devices that are actually failed or quarantined can recover —
+        symmetric with :meth:`on_failure`'s already-dead check. Validation
+        runs before any state is touched, so a bad id in the middle of the
+        list cannot leave a half-applied recovery.
+        """
+        for d in devices:
+            if not 0 <= d < len(self.alive):
+                raise ValueError(f"device {d} out of range "
+                                 f"[0, {len(self.alive)})")
+            if self.alive[d] and not self.quarantined[d]:
+                raise ValueError(f"device {d} is not failed or quarantined")
         for d in devices:
             self.alive[d] = True
             self.quarantined[d] = False
@@ -135,7 +162,8 @@ class Orchestrator:
         self.utilization_history.append(prog.utilization)
         return prog
 
-    def begin_workloads(self, count: int) -> list[ReduceProgram]:
+    def begin_workloads(self, count: int, congestion_aware: bool = False,
+                        **driver_kw) -> list[ReduceProgram]:
         """Admit ``count`` workloads with one batched engine solve.
 
         All instances are solved against the *current* availability
@@ -144,20 +172,66 @@ class Orchestrator:
         touched a switch that ran out of capacity in the meantime is
         re-solved serially against the updated availability (rare — it
         needs ``count`` placements to pile onto one switch's last slots).
+
+        ``congestion_aware=True`` routes admission through the
+        repeated-solve congestion driver
+        (:func:`repro.collectives.schedule.plan_congestion`): the batch is
+        re-solved under penalty-reweighted link rates until the max-link
+        congestion across the admitted tenants stops improving, then the
+        same capacity claim/collision accounting applies. The driver's
+        diagnostics land in ``self.last_congestion`` (re-measured against
+        the *admitted* placements when collision fallbacks replaced any
+        driver placement, so it never overstates the fleet); extra keyword
+        arguments (``max_rounds``, ``alpha``, ``rho_weighted``, …) pass
+        through to it. Requires ``strategy="soar"``.
         """
         if self._residual is None:
             raise ValueError("begin_workloads needs capacity set")
+        if congestion_aware and self.cfg.strategy != "soar":
+            raise ValueError("congestion-aware admission needs "
+                             f"strategy='soar', not {self.cfg.strategy!r}")
+        if not congestion_aware and driver_kw:
+            raise ValueError(f"driver options {sorted(driver_kw)} only "
+                             "apply with congestion_aware=True")
+        if count == 0:
+            return []
         snapshot = self._avail()
-        planned = plan_batch([self.topo] * count, self.cfg.k,
-                             [snapshot] * count, strategy=self.cfg.strategy)
+        driver_res = None
+        if congestion_aware:
+            planned, driver_res = plan_congestion(
+                self.topo, self.cfg.k, count=count, avails=snapshot,
+                **driver_kw)
+        else:
+            planned = plan_batch([self.topo] * count, self.cfg.k,
+                                 [snapshot] * count,
+                                 strategy=self.cfg.strategy)
         progs: list[ReduceProgram] = []
+        admitted: list[np.ndarray] = []
+        collisions = 0
         for blue, prog in planned:
             if np.any(blue & (self._residual <= 0)):   # capacity collision
                 blue, prog = plan(self.topo, self.cfg.k, avail=self._avail(),
                                   strategy=self.cfg.strategy)
+                collisions += 1
             self._residual[blue] -= 1
             self.utilization_history.append(prog.utilization)
             progs.append(prog)
+            admitted.append(blue)
+        if driver_res is not None:
+            # collision fallbacks replace driver placements with
+            # utilization-only ones; re-measure so last_congestion reports
+            # what was actually admitted, not what the driver proposed
+            if collisions:
+                from ..core.congestion import measure_fleet
+                m = measure_fleet(
+                    self.topo.tree, [self.topo.load] * count, admitted,
+                    rho_weighted=driver_kw.get("rho_weighted", False))
+                driver_res = dataclasses.replace(
+                    driver_res, blue=np.stack(admitted), costs=m.costs,
+                    msgs=m.msgs, congestion=m.congestion,
+                    max_congestion=m.max_congestion,
+                    mean_congestion=m.mean_congestion)
+            self.last_congestion = driver_res
         return progs
 
     def engine_cache_stats(self) -> dict:

@@ -65,3 +65,43 @@ def test_tree_allreduce_equals_psum_subprocess():
         capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "COLLECTIVE_CHECK_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# fail_devices state-corruption regressions
+# ---------------------------------------------------------------------------
+
+def test_fail_devices_duplicate_ids_release_load_once():
+    """A duplicated id in `dead` must fail the device once, not drain its
+    leaf's load twice."""
+    from repro.collectives import fail_devices
+    topo = fleet_tree(2, 2, 2)
+    t2 = fail_devices(topo, [3, 3, 3])
+    assert t2.load.sum() == topo.load.sum() - 1
+    assert t2.device_leaf[3] == -1
+    assert (t2.load >= 0).all()
+
+
+def test_fail_devices_already_dead_raises_and_preserves_last_switch():
+    """Failing an already-failed device used to index load[-1] and silently
+    drain the *last* switch's load; it must raise instead."""
+    from repro.collectives import fail_devices
+    topo = fleet_tree(2, 2, 2)
+    once = fail_devices(topo, [0])
+    last_load = once.load[-1]
+    with pytest.raises(ValueError):
+        fail_devices(once, [0])
+    assert once.load[-1] == last_load          # untouched by the rejected call
+    with pytest.raises(ValueError):
+        fail_devices(topo, [topo.n_devices])   # out-of-range id
+
+
+def test_plan_batch_rejects_mismatched_avail_lengths():
+    """plan_batch used to zip-truncate silently when len(avails) !=
+    len(topos); now it is a hard error."""
+    from repro.collectives.schedule import plan_batch
+    topo = fleet_tree(2, 2, 2)
+    with pytest.raises(ValueError):
+        plan_batch([topo, topo], 2, [None])
+    with pytest.raises(ValueError):
+        plan_batch([topo], 2, [None, None], strategy="top")

@@ -1,0 +1,248 @@
+"""Congestion measurement + repeated-solve driver: parity, brute-force
+min-max optimality on small trees, per-round bit-identity vs serial SOAR,
+and the stack wiring (plan_congestion / orchestrator admission)."""
+from itertools import combinations, product
+
+import numpy as np
+import pytest
+
+from repro.collectives import fleet_tree, plan_congestion
+from repro.core import bt
+from repro.core.congestion import (congestion_profile, max_congestion,
+                                   messages_up_batch, messages_up_forest)
+from repro.core.forest import build_forest
+from repro.core.reduce import phi
+from repro.core.soar import soar
+from repro.core.tree import DEST, Tree, sample_load
+from repro.engine import solve_batch, solve_congestion
+from repro.runtime import Orchestrator, OrchestratorConfig
+
+
+def _random_tree(rng, n_lo=5, n_hi=8):
+    n = int(rng.integers(n_lo, n_hi))
+    parent = np.full(n, DEST, np.int32)
+    for v in range(1, n):
+        parent[v] = int(rng.integers(0, v))
+    return Tree(parent, rng.integers(1, 9, n) / 4.0)
+
+
+# ---------------------------------------------------------------------------
+# link-load kernel: device sweep bit-identical to the host reference
+# ---------------------------------------------------------------------------
+
+def test_messages_up_forest_bit_identical_to_host():
+    rng = np.random.default_rng(3)
+    trees, loads, blues = [], [], []
+    for _ in range(12):
+        n = int(rng.integers(1, 25))
+        parent = np.full(n, DEST, np.int32)
+        for v in range(1, n):
+            parent[v] = int(rng.integers(0, v))
+        trees.append(Tree(parent, rng.integers(1, 32, n) / 8.0))
+        loads.append(rng.integers(0, 7, n))
+        blues.append(rng.random(n) < 0.3)
+    f = build_forest(trees, loads)
+    B, n_max = f.mask.shape
+    blue_pad = np.zeros((B, n_max), bool)
+    for b, u in enumerate(blues):
+        blue_pad[b, : len(u)] = u
+    dev = messages_up_forest(f, blue_pad)
+    for b, (t, L, u) in enumerate(zip(trees, loads, blues)):
+        host = messages_up_batch([t], [L], [u])[0]
+        assert np.array_equal(dev[b, : t.n], host)     # bit-identical
+        assert dev[b, t.n :].sum() == 0                # padding stays zero
+
+
+def test_congestion_profile_shapes_and_weighting():
+    t = bt(16, "constant")
+    loads = [sample_load(t, "uniform", seed=s) for s in range(3)]
+    blues = [np.zeros(t.n, bool)] * 3
+    msgs = messages_up_batch([t] * 3, loads, blues)
+    count = congestion_profile(msgs)
+    timew = congestion_profile(msgs, t.rho)
+    assert count.shape == timew.shape == (t.n,)
+    assert np.array_equal(timew, count * t.rho)
+
+
+# ---------------------------------------------------------------------------
+# driver vs brute-force min-max-congestion enumeration (small trees)
+# ---------------------------------------------------------------------------
+
+def _brute_minmax(t, loads, k):
+    """min over all per-tenant (<= k)-subsets of the max-link congestion."""
+    subs = []
+    for sz in range(k + 1):
+        for c in combinations(range(t.n), sz):
+            m = np.zeros(t.n, bool)
+            m[list(c)] = True
+            subs.append(m)
+    best = None
+    for combo in product(subs, repeat=len(loads)):
+        prof = congestion_profile(
+            messages_up_batch([t] * len(loads), loads, list(combo)))
+        best = prof.max() if best is None else min(best, prof.max())
+    return int(best)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5])
+def test_driver_achieves_bruteforce_minmax(seed):
+    """On these small 2-tenant instances the penalty loop reaches the true
+    min-max-congestion optimum (and strictly beats utilization-only)."""
+    rng = np.random.default_rng(seed)
+    t = _random_tree(rng)
+    loads = [rng.integers(0, 5, t.n) for _ in range(2)]
+    res = solve_congestion(t, loads, 1, max_rounds=10, patience=3)
+    opt = _brute_minmax(t, loads, 1)
+    assert res.max_congestion == opt
+    assert res.max_congestion < res.baseline_max       # strict improvement
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_driver_sandwiched_by_brute_and_baseline(seed):
+    """brute optimum <= driver <= utilization-only baseline, always."""
+    rng = np.random.default_rng(seed)
+    t = _random_tree(rng)
+    loads = [rng.integers(0, 5, t.n) for _ in range(2)]
+    res = solve_congestion(t, loads, 1, max_rounds=10, patience=3)
+    assert _brute_minmax(t, loads, 1) <= res.max_congestion
+    assert res.max_congestion <= res.baseline_max
+
+
+# ---------------------------------------------------------------------------
+# per-round placements bit-identical to serial soar on the reweighted rho
+# ---------------------------------------------------------------------------
+
+def test_per_round_placements_bit_identical_to_serial_soar():
+    """Each round's batched solve must equal serial `soar` run per tenant
+    on the same penalty-reweighted (dyadic-quantized) rho — exact equality
+    of masks, not approximate (see engine/batched.py numerics note)."""
+    t = bt(32, "constant")
+    loads = [sample_load(t, "power-law", seed=s) for s in range(6)]
+    res = solve_congestion(t, loads, 4, record_rounds=True)
+    assert len(res.rounds_log) == res.rounds >= 2
+    for r, (rho_eff, blue) in enumerate(res.rounds_log):
+        for ti, L in enumerate(loads):
+            ref = soar(Tree(t.parent, rho_eff[ti]), L, 4)
+            assert np.array_equal(blue[ti], ref.blue), (r, ti)
+    # round 0 runs on the unweighted tree
+    assert np.array_equal(res.rounds_log[0][0],
+                          np.broadcast_to(t.rho, res.rounds_log[0][0].shape))
+
+
+# ---------------------------------------------------------------------------
+# fleet scenario: measurable reduction, convergence, monotone best
+# ---------------------------------------------------------------------------
+
+def test_fleet_scenario_reduction_and_convergence():
+    """Acceptance: at T >= 16 the driver cuts max-link congestion >= 15%
+    vs utilization-only solve_batch, within the round bound, and the
+    result is the best round seen (monotone-best tracking)."""
+    t = bt(128, "constant")
+    T, k, max_rounds = 16, 8, 8
+    loads = [sample_load(t, "power-law", seed=s) for s in range(T)]
+    res = solve_congestion(t, loads, k, max_rounds=max_rounds)
+    assert res.improvement >= 0.15
+    # converged: the final round did not improve (plateau reached within
+    # the budget), not merely "ran out of rounds mid-descent"
+    assert res.best_round < res.rounds - 1 <= max_rounds - 1
+    assert res.max_congestion == min(res.history)      # monotone best
+    assert res.history[0] == res.baseline_max
+    # round 0 is exactly the utilization-only batched solve
+    base = solve_batch([t] * T, loads, k)
+    prof0 = congestion_profile(
+        messages_up_batch([t] * T, loads, [base.blue_of(b)
+                                           for b in range(T)]))
+    assert res.baseline_max == prof0.max()
+    # every tenant keeps a valid budget-k placement, costed on original rho
+    for ti, L in enumerate(loads):
+        assert res.blue[ti].sum() <= k
+        assert res.costs[ti] == phi(t, L, res.blue[ti])
+    # the reported profile matches the masks it ships
+    prof = congestion_profile(
+        messages_up_batch([t] * T, loads, list(res.blue)))
+    assert np.array_equal(prof, res.congestion)
+    assert res.max_congestion == max_congestion(t, loads, list(res.blue))
+
+
+def test_driver_input_validation():
+    t = bt(16, "constant")
+    L = sample_load(t, "uniform", seed=0)
+    with pytest.raises(ValueError):
+        solve_congestion(t, [], 2)
+    with pytest.raises(ValueError):
+        solve_congestion(t, [L], 2, max_rounds=0)
+    with pytest.raises(ValueError):
+        solve_congestion(t, [L], 2, color=False)
+    with pytest.raises(ValueError):
+        solve_congestion(t, [L, L], 2, avail=[None])
+
+
+def test_rho_weighted_congestion_mode():
+    t = bt(32, "linear")
+    loads = [sample_load(t, "power-law", seed=s) for s in range(4)]
+    res = solve_congestion(t, loads, 3, rho_weighted=True)
+    assert res.max_congestion == pytest.approx(
+        max_congestion(t, loads, list(res.blue), rho_weighted=True))
+
+
+# ---------------------------------------------------------------------------
+# stack wiring: plan_congestion and orchestrator admission
+# ---------------------------------------------------------------------------
+
+def test_plan_congestion_builds_consistent_programs():
+    topo = fleet_tree(2, 4, 4)
+    rng = np.random.default_rng(5)
+    loads = []
+    for _ in range(6):
+        L = topo.load.copy()
+        # each tenant runs on a random subset of the racks
+        L[rng.random(topo.tree.n) < 0.4] = 0
+        loads.append(L)
+    planned, res = plan_congestion(topo, 3, loads=loads)
+    assert len(planned) == 6
+    for (blue, prog), L, cost in zip(planned, loads, res.costs):
+        assert prog.utilization == pytest.approx(phi(topo.tree, L, blue))
+        assert prog.utilization == pytest.approx(cost)
+        assert blue.sum() <= 3
+    with pytest.raises(ValueError):
+        plan_congestion(topo, 3)                       # loads xor count
+    with pytest.raises(ValueError):
+        plan_congestion(topo, 3, loads=loads, count=6)
+
+
+def test_orchestrator_congestion_aware_admission():
+    topo = fleet_tree(2, 4, 4)
+    # capacity 8 >= 1 + 4 admitted workloads: no collision fallback fires,
+    # so the admitted fleet is exactly the driver's (monotone-best) output
+    orch = Orchestrator(topo, OrchestratorConfig(k=4, capacity=8))
+    progs = orch.begin_workloads(4, congestion_aware=True)
+    assert len(progs) == 4
+    assert (orch._residual >= 0).all()                 # claims respected
+    assert orch.last_congestion is not None
+    assert orch.last_congestion.max_congestion <= \
+        orch.last_congestion.baseline_max
+    # driver options without the flag are a hard error, not silently lost
+    with pytest.raises(ValueError):
+        orch.begin_workloads(2, max_rounds=4)
+    # congestion-aware admission is a soar-only mode
+    top = Orchestrator(topo, OrchestratorConfig(k=4, capacity=3,
+                                                strategy="top"))
+    with pytest.raises(ValueError):
+        top.begin_workloads(2, congestion_aware=True)
+
+
+def test_congestion_admission_report_matches_admitted_placements():
+    """With tight capacity some driver placements are replaced by collision
+    fallbacks; last_congestion must then describe what was *admitted*."""
+    topo = fleet_tree(2, 4, 4)
+    orch = Orchestrator(topo, OrchestratorConfig(k=3, capacity=1))
+    orch.begin_workloads(3, congestion_aware=True)
+    assert (orch._residual >= 0).all()
+    res = orch.last_congestion
+    assert res.blue.shape[0] == 3
+    prof = congestion_profile(messages_up_batch(
+        [topo.tree] * 3, [topo.load] * 3, list(res.blue)))
+    assert np.array_equal(prof, res.congestion)
+    assert res.max_congestion == prof.max()
+    for blue, cost in zip(res.blue, res.costs):
+        assert cost == pytest.approx(phi(topo.tree, topo.load, blue))

@@ -163,3 +163,97 @@ def test_replan_is_bounded_by_budget_always():
         # placement only uses switches (never out of tree bounds)
         assert orch.program.utilization == pytest.approx(
             phi(orch.topo.tree, orch.topo.load, orch.blue))
+
+
+def test_on_recover_never_failed_device_raises():
+    """on_recover used to silently accept healthy devices and reset their
+    straggler state — now symmetric with on_failure's already-dead check."""
+    topo, orch = mk(k=2)
+    with pytest.raises(ValueError):
+        orch.on_recover([4])
+    assert orch.replans == 1                  # no spurious replan happened
+    orch.on_failure([4])
+    orch.on_recover([4])                      # legitimate recovery still works
+    # a mixed list with one bad id must not half-apply before raising
+    orch.on_failure([5, 6])
+    with pytest.raises(ValueError):
+        orch.on_recover([5, 7])               # 7 is healthy
+    assert not orch.alive[5] and not orch.alive[6]
+    orch.on_recover([5, 6])
+    assert orch.n_alive == topo.n_devices
+
+
+def test_capacity_residual_never_negative_across_events():
+    """Residual aggregation capacity stays >= 0 across batched admissions,
+    failure replans and recoveries, and released claims add back up."""
+    topo, orch = mk(k=4, capacity=2)
+    total = orch._residual.sum() + orch.blue.sum()    # capacity invariant
+    assert (orch._residual >= 0).all()
+    orch.begin_workloads(2)                   # 3 workloads hold claims now
+    assert (orch._residual >= 0).all()
+    claimed_before = total - orch._residual.sum()
+    orch.on_failure([0, 1, 2, 3])             # replan releases+reclaims own
+    assert (orch._residual >= 0).all()
+    orch.on_recover([0, 1, 2, 3])
+    assert (orch._residual >= 0).all()
+    # the failure/recovery cycle restores the original plan: claims must
+    # balance back exactly — a leak here is the double-release bug class
+    assert total - orch._residual.sum() == claimed_before
+    orch.begin_workloads(1, congestion_aware=True)
+    assert (orch._residual >= 0).all()
+    assert total - orch._residual.sum() >= claimed_before  # new claim added
+
+
+def test_preplan_snapshot_matches_real_replan_with_extra_workloads():
+    """preplan_failures' claim-release snapshot must equal the availability
+    a real replan sees, also when other workloads hold claims."""
+    topo, orch = mk(k=3, capacity=2)
+    orch.begin_workload()                     # a second tenant claims slots
+    planned = orch.preplan_failures([[0], [4, 5]])
+    for devices, (blue, util) in zip([[0], [4, 5]], planned):
+        probe = Orchestrator(topo, OrchestratorConfig(k=3, capacity=2))
+        probe.begin_workload()                # reproduce the claim state
+        probe.on_failure(list(devices))
+        assert util == pytest.approx(probe.program.utilization)
+        assert blue.sum() <= 3
+    # preplanning stays read-only
+    assert orch.replans == 1
+    assert (orch._residual >= 0).all()
+
+
+def test_on_failure_validates_before_mutating():
+    """A bad id mid-list must not half-apply: on_failure([ok, dead]) used to
+    mark `ok` dead, then raise — leaving alive/grad_scale inconsistent with
+    the still-compiled program."""
+    topo, orch = mk(k=2)
+    orch.on_failure([9])
+    with pytest.raises(ValueError):
+        orch.on_failure([10, 9])              # 9 already dead
+    assert orch.alive[10]                     # 10 untouched by rejected call
+    assert orch.n_alive == topo.n_devices - 1
+    with pytest.raises(ValueError):
+        orch.on_failure([11, topo.n_devices])  # out-of-range id
+    assert orch.alive[11]
+    # duplicates in one call collapse to a single failure
+    orch.on_failure([12, 12])
+    assert orch.n_alive == topo.n_devices - 2
+
+
+def test_all_devices_failing_leaves_state_untouched():
+    """The all-devices-failed RuntimeError must fire *before* mutation, not
+    after marking everything dead with a stale compiled program."""
+    topo, orch = mk(k=2)
+    with pytest.raises(RuntimeError):
+        orch.on_failure(list(range(topo.n_devices)))
+    assert orch.n_alive == topo.n_devices     # nothing was half-applied
+    assert orch.replans == 1
+    orch.on_failure([0])                      # orchestrator still usable
+
+
+def test_begin_workloads_zero_count_returns_empty():
+    """count=0 is a no-op in both admission modes (the plain path already
+    returned []; the congestion path used to crash in the driver)."""
+    topo, orch = mk(k=2, capacity=2)
+    assert orch.begin_workloads(0) == []
+    assert orch.begin_workloads(0, congestion_aware=True) == []
+    assert len(orch.utilization_history) == 1     # only the init plan
