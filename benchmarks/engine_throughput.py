@@ -33,7 +33,7 @@ import numpy as np
 from repro.core import bt, sample_load
 from repro.core.forest import build_forest
 from repro.core.soar_fast import soar_fast
-from repro.engine import solve_batch, solve_forest
+from repro.engine import EngineOptions, solve_batch, solve_forest
 
 from .common import fmt_table, out_path, write_csv
 
@@ -66,15 +66,16 @@ def run(n_total: int = N_TOTAL, k: int = K, batches=BATCHES,
         t0 = time.perf_counter()
         res = solve_batch(trees, loads, k)           # compile + warm
         t_compile = time.perf_counter() - t0
+        pr1_opts = EngineOptions(debug_tables=True, cap=False)
         res_pr1 = solve_batch(trees, loads, k,       # warm the PR 1 path
-                              debug_tables=True, cap=False)
+                              options=pr1_opts)
         serial = [soar_fast(t, L, k) for L in loads]   # warm + sanity oracle
         t_serial = _time(lambda: [soar_fast(t, L, k) for L in loads], reps)
         t_pr1 = _time(lambda: solve_batch(trees, loads, k,
-                                          debug_tables=True, cap=False), reps)
+                                          options=pr1_opts), reps)
         t_dev = _time(lambda: solve_batch(trees, loads, k), reps)
         forest = build_forest(trees, loads)
-        t_costs = _time(lambda: solve_forest(forest, k, color=False), reps)
+        t_costs = _time(lambda: solve_forest(forest, k, options=EngineOptions(color=False)), reps)
         # sanity: identical costs and bit-identical masks across paths
         assert all(res.costs[b] == serial[b].cost for b in range(B)), \
             "engine/serial cost mismatch"

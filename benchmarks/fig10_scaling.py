@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import all_red, bt, phi, sample_load, soar_fast
 from repro.core.forest import build_forest
-from repro.engine import solve_forest
+from repro.engine import EngineOptions, solve_forest
 
 from .common import fmt_table, write_csv
 
@@ -37,7 +37,8 @@ def run(sizes=SIZES, reps: int = REPS, quiet: bool = False):
         reds = [phi(t, L, all_red(t)) for L in loads]
         forest = build_forest([t] * len(loads), loads)   # pack once per n
         for rule, k in _k_rules(n).items():
-            costs = solve_forest(forest, k, color=False).costs
+            costs = solve_forest(forest, k,
+                                 options=EngineOptions(color=False)).costs
             ratio = float(np.mean([c / r for c, r in zip(costs, reds)]))
             rows_a.append([n, rule, k, ratio])
         # (b): smallest k achieving each target reduction. SOAR cost is

@@ -6,8 +6,11 @@ pile messages onto the same links — the *max-link congestion* across the
 fleet can be far above what a coordinated assignment achieves. The
 repeated-solve congestion driver (`repro.engine.solve_congestion`)
 re-solves the whole tenant batch under penalty-reweighted link rates until
-the hottest link stops improving, keeping the best (max-congestion, total
-utilization) placement seen.
+the hottest link stops improving, keeping the best placement seen. By
+default the whole round loop runs on the accelerator as one jitted
+`lax.while_loop` — only the best masks and the scalar history come back
+(`bytes_to_host` below); `device_loop=False` runs the bit-identical
+host-driven reference.
 
 Run:  python examples/congestion_aware_placement.py
       (or PYTHONPATH=src python examples/congestion_aware_placement.py from
@@ -26,7 +29,7 @@ T = 16             # tenants sharing the tree
 t = bt(N_TOTAL, "constant")
 loads = [sample_load(t, "power-law", seed=s) for s in range(T)]
 
-res = solve_congestion(t, loads, K, record_rounds=True)
+res = solve_congestion(t, loads, K)
 
 print(f"BT({N_TOTAL}), {T} tenants, k={K}, power-law loads\n")
 print(f"{'round':<6} {'max-link congestion':<20}")
@@ -38,7 +41,8 @@ base = solve_batch([t] * T, loads, K)
 util_only = base.costs.sum()
 print(f"\nmax-link congestion: {res.baseline_max:.0f} (utilization-only) "
       f"-> {res.max_congestion:.0f} "
-      f"({100 * res.improvement:.1f}% reduction, {res.rounds} rounds)")
+      f"({100 * res.improvement:.1f}% reduction, {res.rounds} rounds, "
+      f"{res.bytes_to_host} bytes device->host for the whole loop)")
 print(f"total utilization:   {util_only:.1f} (utilization-only) "
       f"-> {res.costs.sum():.1f} "
       f"(+{100 * (res.costs.sum() / util_only - 1):.2f}% — the price of "

@@ -1,10 +1,11 @@
-from .schedule import (ReduceProgram, build_program, plan, plan_batch,
-                       plan_congestion)
+from .schedule import (CongestionPlan, ReduceProgram, TenantPlan,
+                       build_program, plan, plan_batch, plan_congestion)
 from .topology import ClusterTopology, chip_level_tree, fail_devices, fleet_tree
 from .tree_allreduce import tree_allreduce, tree_allreduce_tree
 
 __all__ = [
-    "ReduceProgram", "build_program", "plan", "plan_batch",
-    "plan_congestion", "ClusterTopology", "chip_level_tree", "fleet_tree",
-    "fail_devices", "tree_allreduce", "tree_allreduce_tree",
+    "CongestionPlan", "ReduceProgram", "TenantPlan", "build_program",
+    "plan", "plan_batch", "plan_congestion", "ClusterTopology",
+    "chip_level_tree", "fleet_tree", "fail_devices", "tree_allreduce",
+    "tree_allreduce_tree",
 ]

@@ -13,9 +13,8 @@ import dataclasses
 import numpy as np
 
 from ..core.reduce import messages_up, phi
-from ..core.soar_fast import soar_fast
 from ..core import baselines
-from ..core.tree import DEST, Tree
+from ..engine.options import EngineOptions, resolve_options
 from .topology import ClusterTopology
 
 
@@ -121,20 +120,65 @@ def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantPlan:
+    """One planned tenant: the blue mask, its compiled program, its cost.
+
+    ``cost`` is the placement's utilization (phi on the original rho, the
+    same number :class:`ReduceProgram` carries). Iterable-unpacking keeps
+    the historical ``blue, program = plan(...)`` spelling working."""
+
+    blue: np.ndarray
+    program: ReduceProgram
+    cost: float
+
+    def __iter__(self):
+        return iter((self.blue, self.program))
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionPlan:
+    """:func:`plan_congestion`'s result: per-tenant plans + diagnostics.
+
+    ``plans`` is a list of :class:`TenantPlan` in tenant order; ``result``
+    the driver's ``CongestionResult`` (baseline vs achieved congestion,
+    rounds, history, transfer accounting). Unpacks as the historical
+    ``planned, res = plan_congestion(...)`` pair."""
+
+    plans: list
+    result: object                 # repro.engine.CongestionResult
+
+    def __iter__(self):
+        return iter((self.plans, self.result))
+
+    @property
+    def max_congestion(self) -> float:
+        return self.result.max_congestion
+
+    @property
+    def improvement(self) -> float:
+        return self.result.improvement
+
+
 def plan(topo: ClusterTopology, k: int, avail: np.ndarray | None = None,
-         strategy: str = "soar"):
-    """Choose the blue set for a budget k and build the program."""
-    if strategy == "soar":
-        blue = soar_fast(topo.tree, topo.load, k, avail=avail).blue
-    else:
-        blue = baselines.STRATEGIES[strategy](
-            topo.tree, topo.load, k, avail=avail)
-    return blue, build_program(topo, blue)
+         strategy: str = "soar", *, options: EngineOptions | None = None,
+         **engine_kw) -> TenantPlan:
+    """Choose the blue set for a budget k and build the program.
+
+    A single-topology :func:`plan_batch` — ``strategy="soar"`` runs the
+    same batched device engine (historically this path used the serial
+    host solver and silently ignored engine options; it now delegates, so
+    ``options=EngineOptions(...)`` applies and the masks are identical to
+    a batch of one). Returns a :class:`TenantPlan`; ``blue, program =
+    plan(...)`` still unpacks."""
+    return plan_batch([topo], k, [avail], strategy=strategy,
+                      options=options, **engine_kw)[0]
 
 
 def plan_batch(topos: list[ClusterTopology], k: int,
                avails: list[np.ndarray | None] | None = None,
-               strategy: str = "soar", **engine_kw):
+               strategy: str = "soar", *,
+               options: EngineOptions | None = None, **engine_kw):
     """Batched planning: place B scenarios/workloads in one engine solve.
 
     For ``strategy="soar"`` all instances run through
@@ -142,10 +186,12 @@ def plan_batch(topos: list[ClusterTopology], k: int,
     (fused level-fold gather + on-device color), so only the blue masks
     and costs the program builder needs ever leave the accelerator, and
     same-shape scenario fleets amortize to a single compiled executable
-    (ragged fleets bucket onto few, see ``build_forest``). Extra keyword
-    arguments (``dtype``, ``use_pallas``, ``cap``, ``debug_tables``, …)
-    pass through to the engine. Other strategies fall back to the serial
-    per-instance baselines. Returns ``[(blue, program)]`` in input order.
+    (ragged fleets bucket onto few, see ``build_forest``). Engine behavior
+    comes from ``options=EngineOptions(...)`` (legacy engine keyword
+    arguments still work for one release, with a ``DeprecationWarning``).
+    Other strategies fall back to the serial per-instance baselines.
+    Returns ``[TenantPlan]`` in input order (each unpacks as the
+    historical ``(blue, program)`` pair).
     """
     if not topos:
         return []
@@ -154,25 +200,30 @@ def plan_batch(topos: list[ClusterTopology], k: int,
         raise ValueError(f"{len(avails)} avail masks for {len(topos)} "
                          f"topologies — plan_batch pairs them positionally")
     if strategy == "soar":
-        if not engine_kw.get("color", True):
+        opts = resolve_options(options, engine_kw, "plan_batch")
+        if not opts.color:
             raise ValueError("plan_batch builds programs from blue masks; "
                              "the costs-only mode (color=False) is not "
                              "usable here — call repro.engine.solve_batch "
                              "directly")
         from ..engine import solve_batch
         res = solve_batch([tp.tree for tp in topos],
-                          [tp.load for tp in topos], k, avails, **engine_kw)
+                          [tp.load for tp in topos], k, avails, options=opts)
         blues = [res.blue_of(b) for b in range(len(topos))]
-    elif engine_kw:
+    elif options is not None or engine_kw:
+        named = sorted(engine_kw) if engine_kw else "options="
         raise ValueError(
-            f"engine options {sorted(engine_kw)} only apply to "
+            f"engine options {named} only apply to "
             f"strategy='soar', not {strategy!r}")
     else:
         fn = baselines.STRATEGIES[strategy]
         blues = [fn(tp.tree, tp.load, k, avail=av)
                  for tp, av in zip(topos, avails, strict=True)]
-    return [(blue, build_program(tp, blue))
-            for tp, blue in zip(topos, blues, strict=True)]
+    out = []
+    for tp, blue in zip(topos, blues, strict=True):
+        prog = build_program(tp, blue)
+        out.append(TenantPlan(blue, prog, prog.utilization))
+    return out
 
 
 def plan_congestion(topo: ClusterTopology, k: int,
@@ -190,10 +241,12 @@ def plan_congestion(topo: ClusterTopology, k: int,
     one per-tenant load vector (or pass ``count`` to admit that many
     copies of ``topo.load`` — the orchestrator's admission shape);
     ``avails`` is a shared mask or a per-tenant list. Driver keyword
-    arguments (``max_rounds``, ``alpha``, ``rho_weighted``, …) pass
-    through. Returns ``([(blue, program)], CongestionResult)`` — the
-    programs in tenant order, the result carrying the congestion
-    diagnostics (baseline vs achieved max/mean, rounds, history).
+    arguments (``max_rounds``, ``alpha``, ``capacity``, ``device_loop``,
+    ``options=EngineOptions(...)``, …) pass through. Returns a
+    :class:`CongestionPlan` — per-tenant :class:`TenantPlan`\\ s in tenant
+    order plus the driver's congestion diagnostics (baseline vs achieved
+    max/mean, rounds, history, device↔host traffic); unpacks as the
+    historical ``(planned, result)`` pair.
     """
     if (loads is None) == (count is None):
         raise ValueError("pass exactly one of loads / count")
@@ -201,8 +254,9 @@ def plan_congestion(topo: ClusterTopology, k: int,
         loads = [topo.load] * count
     from ..engine import solve_congestion
     res = solve_congestion(topo.tree, loads, k, avail=avails, **driver_kw)
-    planned = []
+    plans = []
     for L, blue in zip(loads, res.blue, strict=True):
         tenant_topo = dataclasses.replace(topo, load=np.asarray(L, np.int64))
-        planned.append((blue, build_program(tenant_topo, blue)))
-    return planned, res
+        prog = build_program(tenant_topo, blue)
+        plans.append(TenantPlan(blue, prog, prog.utilization))
+    return CongestionPlan(plans, res)

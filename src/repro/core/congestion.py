@@ -48,14 +48,11 @@ def messages_up_batch(trees, loads, blues) -> np.ndarray:
                      for t, L, U in zip(trees, loads, blues, strict=True)])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("lvl_off", "lvl_width", "lvl_internal"))
-def _messages_packed(
+def _messages_body(
     pk_kid: jax.Array,     # (B, S, max_c) int32 child slots, sentinel S
     pk_load: jax.Array,    # (B, S) int
     pk_send: jax.Array,    # (B, S) int
     blue_slot: jax.Array,  # (B, S) bool
-    slot_of: jax.Array,    # (B, n_max) int32 node -> slot (S at padding)
     *,
     lvl_off: tuple,
     lvl_width: tuple,
@@ -67,9 +64,15 @@ def _messages_packed(
     (1 iff its subtree holds load), a red switch forwards its own load
     plus every child's messages. Children live one level down, so each
     level is one gather + sum; results land as contiguous level blocks
-    (no scatters), and the node-indexed answer is a final gather through
-    ``slot_of``. Integer arithmetic throughout — bit-identical to
+    (no scatters). Integer arithmetic throughout — bit-identical to
     :func:`messages_up_batch` by construction.
+
+    Plain traceable function returning the ``(B, S)`` *slot-indexed*
+    counts (level blocks are contiguous, so the concat IS slot order);
+    jitted callers: :func:`_messages_packed` for the node-indexed public
+    result, and the device-resident congestion loop, which feeds the
+    color sweep's slot-indexed masks straight in and keeps the counts on
+    the accelerator.
     """
     B, S, max_c = pk_kid.shape
     h_max = len(lvl_off) - 1
@@ -94,7 +97,27 @@ def _messages_packed(
                                   axis=1)
         msgs_lvl[d] = jnp.where(blue_slot[:, o : o + W],
                                 pk_send[:, o : o + W].astype(jnp.int32), acc)
-    flat = jnp.concatenate([m for m in msgs_lvl if m.shape[1]], axis=1)
+    return jnp.concatenate([m for m in msgs_lvl if m.shape[1]], axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lvl_off", "lvl_width", "lvl_internal"))
+def _messages_packed(
+    pk_kid: jax.Array,     # (B, S, max_c) int32 child slots, sentinel S
+    pk_load: jax.Array,    # (B, S) int
+    pk_send: jax.Array,    # (B, S) int
+    blue_slot: jax.Array,  # (B, S) bool
+    slot_of: jax.Array,    # (B, n_max) int32 node -> slot (S at padding)
+    *,
+    lvl_off: tuple,
+    lvl_width: tuple,
+    lvl_internal: tuple,
+) -> jax.Array:
+    """Jitted :func:`_messages_body`, gathered back to node indexing."""
+    B = pk_kid.shape[0]
+    flat = _messages_body(pk_kid, pk_load, pk_send, blue_slot,
+                          lvl_off=lvl_off, lvl_width=lvl_width,
+                          lvl_internal=lvl_internal)
     pad = jnp.concatenate([flat, jnp.zeros((B, 1), jnp.int32)], axis=1)
     return jnp.take_along_axis(pad, slot_of, axis=1)
 

@@ -5,12 +5,16 @@ device-resident level-synchronous JAX sweep — fused level-fold gather plus
 on-device traceback; only masks and costs leave the accelerator (see
 ``batched.py``). ``solve_congestion`` iterates that solve under penalty-
 reweighted link rates to minimize *max-link congestion* across tenants
-sharing one tree (see ``congestion.py``). The serial per-instance solvers
-stay in ``repro.core``.
+sharing one tree — by default the whole round loop runs on device as one
+jitted ``lax.while_loop`` (see ``congestion.py``). Engine behavior is
+configured through the frozen :class:`EngineOptions` dataclass (see
+``options.py``); the serial per-instance solvers stay in ``repro.core``.
 """
 from .batched import (BatchResult, cache_stats, color_batch, gather_batch,
                       solve_batch, solve_forest)
 from .congestion import CongestionResult, solve_congestion
+from .options import EngineOptions
 
-__all__ = ["BatchResult", "CongestionResult", "cache_stats", "color_batch",
-           "gather_batch", "solve_batch", "solve_congestion", "solve_forest"]
+__all__ = ["BatchResult", "CongestionResult", "EngineOptions", "cache_stats",
+           "color_batch", "gather_batch", "solve_batch", "solve_congestion",
+           "solve_forest"]

@@ -60,7 +60,9 @@ import numpy as np
 from ..core.forest import Forest, build_forest, layout_stats
 from ..core.tree import Tree
 from ..core.tropical import BIG, minplus_batch
-from ..kernels.minplus.levelfold import chain_fold, level_fold, minplus_fused
+from ..kernels.minplus.levelfold import (chain_fold, level_fold,
+                                         minplus_fused, rho_up_from_edges)
+from .options import EngineOptions, resolve_options
 
 # back-compat alias: the engine's fused convolution now lives with the
 # level-fold kernel so both backends share one bit-exact implementation
@@ -156,11 +158,7 @@ def _gather_packed(
     return tuple(blocks)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "lvl_sub", "k",
-                     "cap"))
-def _color_packed(
+def _color_body(
     blocks: tuple,         # per-level gather blocks, see _gather_packed
     pk_kid: jax.Array,     # (B, S, max_c) int32 child slots, sentinel S
     pk_par: jax.Array,     # (B, S) int32 parent's index in *its* level block
@@ -170,7 +168,6 @@ def _color_packed(
     pk_avail: jax.Array,   # (B, S) bool
     pk_rho_up: jax.Array,  # (B, S, H2), BIG at invalid ell
     root_slot: jax.Array,  # (B,) int32
-    slot_of: jax.Array,    # (B, n_max) int32 node -> slot (S at padding)
     *,
     lvl_off: tuple,
     lvl_width: tuple,
@@ -180,6 +177,11 @@ def _color_packed(
     cap: bool,
 ) -> tuple[jax.Array, jax.Array]:
     """On-device SOAR-Color: top-down level-synchronous traceback.
+
+    Plain traceable function (jitted callers: :func:`_color_packed` for the
+    node-indexed public result, the device-resident congestion loop for the
+    slot-indexed masks its message sweep consumes directly). Returns the
+    ``(B, n_slots)`` *slot-indexed* blue mask plus the ``(B,)`` costs.
 
     Replays Algorithm 4's budget split against the resident per-level
     table blocks with the exact tie-breaking of the serial ``soar_color``
@@ -196,9 +198,7 @@ def _color_packed(
     flat region of the monotone tables, where clipped indexing is exact,
     and the first-minimizer split provably stays below the cap). Leaves
     (the back of each level block) skip chains and splits entirely —
-    their blue test is elementwise. Returns the node-indexed ``(B,
-    n_max)`` blue mask and the ``(B,)`` optimal costs — the only arrays a
-    caller needs to pull off-device.
+    their blue test is elementwise.
     """
     B, _, max_c = pk_kid.shape
     K = k + 1
@@ -308,9 +308,52 @@ def _color_packed(
 
     costs = blocks[0][jnp.arange(B), root_slot - lvl_off[0], 1, k]
     blue_slots = jnp.concatenate(blue_parts, axis=1)   # blocks are ordered
-    blue_pad = jnp.concatenate(
-        [blue_slots, jnp.zeros((B, 1), bool)], axis=1)
-    return jnp.take_along_axis(blue_pad, slot_of, axis=1), costs
+    return blue_slots, costs
+
+
+def slots_to_nodes(blue_slots: jax.Array, slot_of: jax.Array) -> jax.Array:
+    """Slot-indexed per-node values -> node-indexed, False/0 at padding.
+
+    ``slot_of`` maps node -> slot with ``n_slots`` at padded nodes; one
+    zero row is appended so padded nodes read the neutral element.
+    """
+    B = blue_slots.shape[0]
+    pad = jnp.concatenate(
+        [blue_slots, jnp.zeros((B, 1), blue_slots.dtype)], axis=1)
+    return jnp.take_along_axis(pad, slot_of, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "lvl_sub", "k",
+                     "cap"))
+def _color_packed(
+    blocks: tuple,
+    pk_kid: jax.Array,
+    pk_par: jax.Array,
+    pk_cidx: jax.Array,
+    pk_load: jax.Array,
+    pk_send: jax.Array,
+    pk_avail: jax.Array,
+    pk_rho_up: jax.Array,
+    root_slot: jax.Array,
+    slot_of: jax.Array,    # (B, n_max) int32 node -> slot (S at padding)
+    *,
+    lvl_off: tuple,
+    lvl_width: tuple,
+    lvl_internal: tuple,
+    lvl_sub: tuple,
+    k: int,
+    cap: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Jitted :func:`_color_body` returning the node-indexed ``(B, n_max)``
+    blue mask and the ``(B,)`` optimal costs — the only arrays a caller
+    needs to pull off-device."""
+    blue_slots, costs = _color_body(
+        blocks, pk_kid, pk_par, pk_cidx, pk_load, pk_send, pk_avail,
+        pk_rho_up, root_slot, lvl_off=lvl_off, lvl_width=lvl_width,
+        lvl_internal=lvl_internal, lvl_sub=lvl_sub, k=k, cap=cap)
+    return slots_to_nodes(blue_slots, slot_of), costs
 
 
 _INPUT_CACHE: dict[tuple, tuple] = {}
@@ -343,6 +386,63 @@ def _device_inputs(f: Forest, dtype) -> tuple:
     _INPUT_CACHE[key] = (weakref.ref(f, lambda _, k=key:
                                      _INPUT_CACHE.pop(k, None)), inputs)
     return inputs
+
+
+_OVERRIDE_CACHE: dict[tuple, tuple] = {}
+
+
+def _override_inputs(f: Forest, dtype) -> tuple:
+    """Device arrays for re-solving ``f`` under effective-rho overrides.
+
+    Returns ``(base_edge, anc, valid, sn, real)``:
+
+      * ``base_edge`` (B, S): each slot's own up-edge rho (the base rates
+        the override scales), finite everywhere — 0 at padded slots;
+      * ``anc`` (B, S, h_max+1) int32: ``anc[b, s, j]`` = slot of the
+        j-th ancestor of slot s (j=0 is s itself; slot 0 past the root);
+      * ``valid`` (B, S, h_max+2) bool: where ``pk_rho_up`` is finite;
+      * ``sn`` / ``real`` (B, S): clipped ``slot_node`` + its validity
+        mask, for gathering node-indexed scale factors into slot order.
+
+    Together with :func:`repro.kernels.minplus.levelfold.rho_up_from_edges`
+    these rebuild the packed rho-up table *on device* from scaled edge
+    rates — no repacking, and the gather/color jit keys don't change, so
+    one compiled executable serves every override (the congestion loop's
+    whole point). Cached per (Forest identity, dtype) like
+    :func:`_device_inputs`; same immutability caveat.
+    """
+    key = (id(f), np.dtype(dtype).str)
+    hit = _OVERRIDE_CACHE.get(key)
+    if hit is not None and hit[0]() is f:
+        return hit[1]
+    B, S = f.slot_node.shape
+    bix = np.arange(B)[:, None]
+    valid = np.isfinite(f.pk_rho_up)
+    anc = np.zeros((B, S, f.h_max + 1), np.int32)
+    cur = f.slot_node.copy()                      # node id walk, -1 done
+    for j in range(f.h_max + 1):
+        alive = cur >= 0
+        idx = np.maximum(cur, 0)
+        anc[:, :, j] = np.where(alive, f.slot_of[bix, idx], 0)
+        cur = np.where(alive, f.parent[bix, idx], -1)
+    inputs = (jnp.asarray(np.where(valid[:, :, 1], f.pk_rho_up[:, :, 1],
+                                   0.0), dtype),
+              jnp.asarray(anc), jnp.asarray(valid),
+              jnp.asarray(np.maximum(f.slot_node, 0)),
+              jnp.asarray(f.slot_node >= 0))
+    _OVERRIDE_CACHE[key] = (weakref.ref(f, lambda _, k=key:
+                                        _OVERRIDE_CACHE.pop(k, None)), inputs)
+    return inputs
+
+
+@jax.jit
+def _override_rho(base_edge: jax.Array, anc: jax.Array, valid: jax.Array,
+                  sn: jax.Array, real: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """Effective packed rho-up table for a node-indexed scale factor."""
+    s_slot = jnp.where(real, jnp.take_along_axis(
+        scale.astype(base_edge.dtype), sn, axis=1), 1)
+    return rho_up_from_edges(base_edge * s_slot, anc, valid)
 
 
 def _gather_device(f: Forest, k: int, dtype, use_pallas: bool,
@@ -518,37 +618,58 @@ def solve_forest(
     f: Forest,
     k: int,
     *,
-    color: bool = True,
-    dtype=jnp.float32,
-    use_pallas: bool | None = None,
-    interpret: bool = False,
-    cap: bool = True,
-    debug_tables: bool = False,
+    options: EngineOptions | None = None,
+    rho_scale: np.ndarray | jax.Array | None = None,
+    **engine_kw,
 ) -> BatchResult:
     """:func:`solve_batch` for a pre-built Forest (amortizes packing).
 
     Default path is fully device-resident: gather and color both run on
     the accelerator and only the ``(B, n_max)`` blue masks plus ``(B,)``
-    costs are transferred. ``color=False`` transfers just the costs.
-    ``debug_tables=True`` is the escape hatch to PR 1's path — full table
-    pullback, host-numpy color, tables attached to the result.
-    ``cap=False`` disables the subtree-budget width truncation (full
-    ``k+1``-wide convolutions at every level, as in PR 1).
+    costs are transferred. Engine behavior is configured through
+    ``options`` (:class:`~repro.engine.options.EngineOptions`); the old
+    keyword spelling (``color=False``, ``debug_tables=True``, …) still
+    works for one release behind a ``DeprecationWarning``.
+
+    ``rho_scale`` — a ``(B, n_max)`` node-indexed multiplier on each
+    instance's *edge* rates — re-solves the prebuilt Forest under
+    effective rho ``rho[v] * rho_scale[b, v]`` without repacking or
+    recompiling: the packed rho-up table is rebuilt on device from the
+    scaled edges (:func:`_override_rho`), every other packed array and
+    the gather/color jit keys are untouched, so one cached executable
+    serves all overrides. This is the congestion driver's re-solve
+    primitive. Incompatible with ``debug_tables`` (the host replay reads
+    the unscaled ``Forest.rho_up``).
     """
+    opts = resolve_options(options, engine_kw, "solve_forest")
     if k < 0:
         raise ValueError("budget k must be non-negative")
+    use_pallas = opts.use_pallas
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    inputs = _device_inputs(f, dtype)
-    blocks = _gather_device(f, k, dtype, use_pallas, interpret, cap, inputs)
+    inputs = _device_inputs(f, opts.dtype)
+    if rho_scale is not None:
+        if opts.debug_tables:
+            raise ValueError("rho_scale re-solves on device-side effective "
+                             "rho; the debug_tables host replay reads the "
+                             "unscaled Forest tables — pick one")
+        if tuple(np.shape(rho_scale)) != (f.batch, f.n_max):
+            raise ValueError(f"rho_scale shape {np.shape(rho_scale)} != "
+                             f"{(f.batch, f.n_max)} (node-indexed, padded)")
+        base, anc, valid, sn, real = _override_inputs(f, opts.dtype)
+        R = _override_rho(base, anc, valid, sn, real,
+                          jnp.asarray(rho_scale))
+        inputs = inputs[:4] + (R,) + inputs[5:]
+    blocks = _gather_device(f, k, opts.dtype, use_pallas, opts.interpret,
+                            opts.cap, inputs)
     kid_d, load_d, send_d, avail_d, R, par_d, cidx_d, slot_d, root_d = inputs
-    if not color:
+    if not opts.color:
         # costs-only planning mode: pull back B scalars, not the tables
         roots = np.asarray(
             blocks[0][jnp.arange(f.batch), root_d - f.lvl_off[0], 1, k])
         return BatchResult(blue=None, costs=roots.astype(np.float64),
                            n=f.n.copy(), bytes_to_host=int(roots.nbytes))
-    if debug_tables:
+    if opts.debug_tables:
         Xn = _unpack_tables(f, blocks)
         costs = Xn[np.arange(f.batch), f.root, 1, k]
         return BatchResult(blue=color_batch(f, Xn, k), costs=costs,
@@ -558,7 +679,8 @@ def solve_forest(
         blocks, kid_d, par_d, cidx_d, load_d, send_d, avail_d, R,
         root_d, slot_d,
         lvl_off=f.lvl_off, lvl_width=f.lvl_width,
-        lvl_internal=f.lvl_internal, lvl_sub=f.lvl_sub, k=k, cap=bool(cap))
+        lvl_internal=f.lvl_internal, lvl_sub=f.lvl_sub, k=k,
+        cap=bool(opts.cap))
     blue = np.asarray(blue_dev)
     costs = np.asarray(costs_dev)
     return BatchResult(blue=blue, costs=costs.astype(np.float64),
@@ -571,16 +693,20 @@ def solve_batch(
     loads: Sequence[np.ndarray],
     k: int,
     avail: Sequence[np.ndarray] | None = None,
-    **kw,
+    *,
+    options: EngineOptions | None = None,
+    **engine_kw,
 ) -> BatchResult:
     """Solve B phi-BIC instances at once; per-instance output contract of
     :func:`repro.core.soar.soar` (optimal costs, at-most-k blue masks).
 
     Instances may be ragged (different n, height, children); the packed
     layout is bucketed (see :func:`repro.core.forest.build_forest`), so
-    batches of similar shape share one compiled executable.
-    ``use_pallas=None`` auto-dispatches: fused level-fold Pallas kernel
-    on TPU, fused jnp elsewhere. Everything stays on device; see
+    batches of similar shape share one compiled executable. Pass engine
+    behavior as ``options=EngineOptions(...)`` — ``use_pallas=None``
+    (the default) auto-dispatches: fused level-fold Pallas kernel on
+    TPU, fused jnp elsewhere. Everything stays on device; see
     :func:`solve_forest`.
     """
-    return solve_forest(build_forest(trees, loads, avail), k, **kw)
+    opts = resolve_options(options, engine_kw, "solve_batch")
+    return solve_forest(build_forest(trees, loads, avail), k, options=opts)

@@ -1,4 +1,4 @@
-"""Congestion-aware multi-tenant placement: a repeated-solve driver.
+"""Congestion-aware multi-tenant placement: a device-resident penalty loop.
 
 SOAR (and :func:`repro.engine.solve_batch`) minimizes each tenant's *own*
 utilization; with T tenants on one shared reduction tree the independently
@@ -9,27 +9,46 @@ minimizes the **max-link congestion**
 
     C_max = max_e sum_t msg_e^t        (optionally time-weighted by rho_e)
 
-by iterated penalty reweighting on top of the device-resident engine:
+by iterated penalty reweighting of the engine's effective link rates:
 
-  1. solve all T tenants batched — one :func:`~repro.engine.solve_forest`
-     call; same tree shape every round, so the layout-bucketed Forest maps
-     every round onto **one** compiled executable;
-  2. measure per-link traffic from the blue masks with the batched
-     level sweep :func:`repro.core.congestion.messages_up_forest`
-     (bit-identical to the host ``messages_up``);
-  3. multiplicatively boost each tenant's *effective* rho on overloaded
+  1. solve all T tenants batched against the current per-tenant effective
+     rho — the packed rho-up table is rebuilt *on device* from the scaled
+     edge rates (:func:`~repro.kernels.minplus.levelfold.rho_up_from_edges`),
+     so every round reuses one prebuilt Forest and one compiled gather /
+     color executable;
+  2. measure per-link traffic from the blue masks with the batched level
+     sweep (``repro.core.congestion``) — still on device;
+  3. multiplicatively boost each tenant's effective rho on overloaded
      links, proportionally to that tenant's own contribution — the tenants
      responsible for a hotspot are the ones re-routed away from it; a
      deterministic per-tenant penalty gradient (``alpha_t`` ramps with the
      tenant index) breaks ties between look-alike tenants, so identical
-     workloads spread instead of migrating in lockstep;
-  4. re-solve on the reweighted rho and keep the best placement seen
-     (lexicographically: max congestion, then total utilization — the loop
-     is monotone-best, never worse than the utilization-only baseline).
+     workloads spread instead of migrating in lockstep. With per-switch
+     ``capacity`` given, links whose switch is near its capacity claim are
+     priced up jointly with hot links (capacity pricing);
+  4. re-solve on the reweighted rho and keep the best (strictly lowest
+     C_max) placement seen — the loop is monotone-best, never worse than
+     the utilization-only baseline (round 0).
 
-Weights are quantized to a dyadic grid (multiples of ``1/1024``), so on
-dyadic-rho trees every round's effective rho stays exactly representable
-in float32 and the batched solve is **bit-identical** to the serial
+**Device-resident loop (default).** ``device_loop=True`` runs the whole
+round loop as one jitted ``lax.while_loop``: fused level-fold gather →
+on-device color → messages-up sweep → penalty reweight → monotone-best
+tracking, with nothing leaving the accelerator between rounds. Only the
+best round's masks, the scalar congestion history, and the round-0 profile
+transfer at the end (``CongestionResult.bytes_to_host`` reports the
+traffic). ``device_loop=False`` keeps the host-driven reference: the same
+jitted round pieces called one round at a time through the public
+:func:`~repro.engine.solve_forest` ``rho_scale`` API, with masks, counts
+and the profile pulled to the host every round (PR 3's transfer pattern).
+
+**Parity.** Both paths run the *identical* float32 update arithmetic —
+the shared :func:`_profile` / :func:`_reweight` bodies and the shared
+device rho-up recompute — so with ``record_rounds=True`` the two paths
+are round-for-round bit-identical: same effective rho, same masks, same
+history (asserted in ``tests/test_congestion_device.py``). Weights are
+quantized to a dyadic grid (multiples of ``1/1024``), so on dyadic-rho
+trees every round's effective rho stays exactly representable in float32
+and the batched solve is also bit-identical to the serial
 :func:`repro.core.soar.soar` on the same reweighted instance (asserted in
 ``tests/test_congestion.py``). Utilization and congestion are always
 reported against the *original* rho — the penalties shape the search, not
@@ -38,15 +57,20 @@ the objective.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from ..core.congestion import (congestion_profile, measure_fleet,
-                               messages_up_forest)
+from ..core.congestion import _messages_body, measure_fleet
 from ..core.forest import build_forest
 from ..core.tree import Tree
-from .batched import solve_forest
+from ..kernels.minplus.levelfold import rho_up_from_edges
+from .batched import (_color_body, _device_inputs, _gather_packed,
+                      _override_inputs)
+from .options import EngineOptions, resolve_options
 
 #: weights are rounded to this dyadic grid so effective rho stays exactly
 #: float32-representable on dyadic-rho trees (bit-identical engine/serial)
@@ -70,6 +94,7 @@ class CongestionResult:
     history: list             # per-round C_max
     rounds_log: list | None = None   # [(rho_eff (T,n), blue (T,n))] when
                                      # record_rounds=True (parity testing)
+    bytes_to_host: int = 0    # device->host traffic the driver actually paid
 
     @property
     def improvement(self) -> float:
@@ -79,9 +104,146 @@ class CongestionResult:
         return 1.0 - self.max_congestion / self.baseline_max
 
 
-def _quantize(w: np.ndarray, cap: float) -> np.ndarray:
-    return np.minimum(np.round(w / W_QUANTUM) * W_QUANTUM, cap)
+# ---------------------------------------------------------------------------
+# shared round arithmetic — the single definition BOTH loop flavors run.
+# The device while_loop inlines these; the host reference calls the jitted
+# wrappers below. Same traced op sequence -> same float32 results (XLA does
+# not contract or reassociate elementwise float ops), which is what makes
+# the two paths round-for-round bit-identical. Keep it that way.
+# ---------------------------------------------------------------------------
 
+def _profile(msgs: jax.Array, link_w: jax.Array) -> jax.Array:
+    """Per-link congestion: int32 counts summed over tenants, then weighted
+    (``link_w`` is the original per-link rho when rho_weighted, else 1)."""
+    return msgs.sum(axis=0).astype(link_w.dtype) * link_w
+
+
+def _reweight(w, msgs, prof, cmax, blue, alpha_t, ramp_t, hot_frac, w_cap,
+              link_w, capacity, cap_beta, cap_frac, *, priced: bool):
+    """One penalty update of the (T, links) weight matrix.
+
+    Hot links (``prof >= hot_frac * cmax``) boost each tenant's weight in
+    proportion to that tenant's own traffic share; with ``priced=True``
+    links whose switch is crowded (total blue claims near its capacity)
+    are priced up jointly, for the tenants sitting on them. One dyadic
+    quantization after the joint boost keeps the effective rho exactly
+    float32-representable on dyadic trees.
+    """
+    hot = prof >= hot_frac * cmax
+    contrib = msgs.astype(w.dtype) * link_w / cmax
+    boost = 1.0 + alpha_t * jnp.where(hot[None, :], contrib, 0.0)
+    if priced:
+        usage = blue.astype(jnp.int32).sum(axis=0).astype(w.dtype)
+        pressure = usage / jnp.maximum(capacity, 1e-6)
+        crowded = (pressure >= cap_frac)[None, :] & blue
+        boost = boost * (1.0 + cap_beta * ramp_t *
+                         jnp.where(crowded, pressure[None, :], 0.0))
+    q = jnp.round(w * boost / W_QUANTUM) * W_QUANTUM
+    return jnp.minimum(q, w_cap)
+
+
+_reweight_step = functools.partial(jax.jit, static_argnames=("priced",))(
+    _reweight)
+
+
+@jax.jit
+def _profile_step(msgs: jax.Array, link_w: jax.Array):
+    """Host-reference measurement: per-link profile plus its max."""
+    prof = _profile(msgs, link_w)
+    return prof, prof.max()
+
+
+@jax.jit
+def _edge_scale(base_edge: jax.Array, w: jax.Array) -> jax.Array:
+    """Effective per-edge rates (the quantity ``record_rounds`` logs)."""
+    return base_edge * w
+
+
+# ---------------------------------------------------------------------------
+# the device-resident loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lvl_off", "lvl_width", "lvl_internal", "lvl_sub", "k",
+                     "cap", "use_pallas", "interpret", "max_rounds",
+                     "record", "priced"))
+def _device_driver(
+    kid, load, send, avail, par, cidx, root_slot,     # packed solve inputs
+    base_edge, anc, valid,                            # rho-override inputs
+    link_w, capacity,                                 # (S,) per-link consts
+    alpha_t, ramp_t,                                  # (T, 1) tenant ramps
+    hot_frac, w_cap, cap_beta, cap_frac, patience,    # scalars
+    *,
+    lvl_off, lvl_width, lvl_internal, lvl_sub, k, cap, use_pallas,
+    interpret, max_rounds: int, record: bool, priced: bool,
+):
+    """The whole penalty loop as one ``lax.while_loop`` on the accelerator.
+
+    Per round: device rho-up recompute -> fused level-fold gather ->
+    on-device color (slot-indexed masks, no node gather) -> messages-up
+    sweep -> shared profile/reweight -> monotone-best tracking. The carry
+    holds the weight matrix, best-so-far masks, the scalar history and
+    (when ``record``) the per-round logs; nothing crosses the host
+    boundary until the caller pulls the final tuple.
+    """
+    T, S, _ = kid.shape
+    dt = base_edge.dtype
+
+    def body(carry):
+        (r, w, stale, stop, best_cmax, best_blue, best_round,
+         history, prof0, log_rho, log_blue) = carry
+        edges = base_edge * w
+        R = rho_up_from_edges(edges, anc, valid)
+        blocks = _gather_packed(
+            kid, load, send, avail, R,
+            lvl_off=lvl_off, lvl_width=lvl_width,
+            lvl_internal=lvl_internal, lvl_sub=lvl_sub,
+            k=k, cap=cap, use_pallas=use_pallas, interpret=interpret)
+        blue, _ = _color_body(
+            blocks, kid, par, cidx, load, send, avail, R, root_slot,
+            lvl_off=lvl_off, lvl_width=lvl_width,
+            lvl_internal=lvl_internal, lvl_sub=lvl_sub, k=k, cap=cap)
+        msgs = _messages_body(
+            kid, load, send, blue,
+            lvl_off=lvl_off, lvl_width=lvl_width, lvl_internal=lvl_internal)
+        prof = _profile(msgs, link_w)
+        cmax = prof.max()
+        history = history.at[r].set(cmax)
+        prof0 = jnp.where(r == 0, prof, prof0)
+        if record:
+            log_rho = log_rho.at[r].set(edges)
+            log_blue = log_blue.at[r].set(blue)
+        better = cmax < best_cmax                    # strict: earliest wins
+        best_blue = jnp.where(better, blue, best_blue)
+        best_round = jnp.where(better, r, best_round)
+        best_cmax = jnp.where(better, cmax, best_cmax)
+        stale = jnp.where(better, 0, stale + 1)
+        stop = (cmax == 0.0) | (stale >= patience)
+        w = _reweight(w, msgs, prof, cmax, blue, alpha_t, ramp_t, hot_frac,
+                      w_cap, link_w, capacity, cap_beta, cap_frac,
+                      priced=priced)
+        return (r + 1, w, stale, stop, best_cmax, best_blue, best_round,
+                history, prof0, log_rho, log_blue)
+
+    def cond(carry):
+        return (carry[0] < max_rounds) & ~carry[3]
+
+    Rl = max_rounds if record else 0
+    init = (jnp.int32(0), jnp.ones((T, S), dt), jnp.int32(0),
+            jnp.asarray(False), jnp.asarray(jnp.inf, dt),
+            jnp.zeros((T, S), bool), jnp.int32(0),
+            jnp.full((max_rounds,), -1.0, dt), jnp.zeros((S,), dt),
+            jnp.zeros((Rl, T, S), dt), jnp.zeros((Rl, T, S), bool))
+    out = jax.lax.while_loop(cond, body, init)
+    (r, _, _, _, best_cmax, best_blue, best_round, history, prof0,
+     log_rho, log_blue) = out
+    return best_blue, best_round, r, history, prof0, log_rho, log_blue
+
+
+# ---------------------------------------------------------------------------
+# the public driver
+# ---------------------------------------------------------------------------
 
 def solve_congestion(
     tree: Tree,
@@ -95,7 +257,12 @@ def solve_congestion(
     hot_frac: float = 0.75,
     w_cap: float = 8.0,
     rho_weighted: bool = False,
+    capacity: np.ndarray | None = None,
+    cap_beta: float = 1.0,
+    cap_frac: float = 0.75,
     record_rounds: bool = False,
+    device_loop: bool = True,
+    options: EngineOptions | None = None,
     **engine_kw,
 ) -> CongestionResult:
     """Minimize max-link congestion for T tenants sharing ``tree``.
@@ -108,86 +275,228 @@ def solve_congestion(
     per-link weights are capped at ``w_cap`` and quantized to
     :data:`W_QUANTUM`. ``rho_weighted=True`` measures congestion in
     transmission time (``msg * rho``) instead of raw message counts.
-    Engine keywords (``dtype``, ``use_pallas``, ``cap``, …) pass through
-    to :func:`~repro.engine.solve_forest`. Runs at most ``max_rounds``
-    solves, stopping early after ``patience`` rounds without improvement;
-    the returned placement is the best round seen, so the result is never
-    worse than the utilization-only baseline (round 0).
+
+    ``capacity`` (n,) switches on *capacity pricing*: links whose switch
+    has blue claims from at least ``cap_frac`` of its per-switch capacity
+    this round are priced up (factor ``1 + cap_beta * ramp_t *
+    usage/capacity``) jointly with the hot-link boost, for the tenants
+    sitting on them — steering the fleet away from switches the
+    orchestrator is about to run out of.
+
+    ``device_loop=True`` (default) runs the whole loop on the
+    accelerator (one jitted ``lax.while_loop``; O(1) host transfer
+    total); ``device_loop=False`` is the host-driven parity reference —
+    identical arithmetic, per-round transfers (see module docstring).
+    Engine behavior comes from ``options=EngineOptions(...)`` (legacy
+    keywords shimmed for one release); ``color=False`` and
+    ``debug_tables=True`` are rejected — the driver needs on-device
+    masks. Runs at most ``max_rounds`` solves, stopping early after
+    ``patience`` rounds without improvement; the returned placement is
+    the best round seen, so the result is never worse than the
+    utilization-only baseline (round 0).
     """
     T = len(loads)
     if T == 0:
         raise ValueError("solve_congestion needs at least one tenant")
     if max_rounds < 1:
         raise ValueError("max_rounds must be >= 1")
-    if not engine_kw.get("color", True):
+    opts = resolve_options(options, engine_kw, "solve_congestion")
+    if not opts.color:
         raise ValueError("solve_congestion needs blue masks; color=False "
                          "(costs-only mode) is not usable here")
+    if opts.debug_tables:
+        raise ValueError("solve_congestion re-solves on device-side "
+                         "effective rho; the debug_tables host replay is "
+                         "not usable here")
     n = tree.n
     rho0 = tree.rho
-    cong_w = rho0 if rho_weighted else None
     if avail is None or isinstance(avail, np.ndarray):
         avails = [avail] * T
     else:
         avails = list(avail)
         if len(avails) != T:
             raise ValueError(f"{len(avails)} avail masks for {T} tenants")
+    priced = capacity is not None
+    if priced:
+        capacity = np.asarray(capacity, np.float64)
+        if capacity.shape != (n,):
+            raise ValueError(f"capacity shape {capacity.shape} != ({n},)")
+    use_pallas = opts.use_pallas
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    # one Forest, one packing, one compiled executable for the whole loop
+    f = build_forest([tree] * T, list(loads), avails)
+    dt = opts.dtype
+    kid, load, send, avail_d, _, par, cidx, slot_d, root_d = \
+        _device_inputs(f, dt)
+    base_edge, anc, valid, _, _ = _override_inputs(f, dt)
+
     # per-tenant penalty ramp: deterministic symmetry breaker
-    alpha_t = alpha * (1.0 + (np.arange(T) / max(1, T - 1)))[:, None]
+    ramp_t = jnp.asarray(
+        (1.0 + np.arange(T) / max(1, T - 1))[:, None], dt)
+    alpha_t = jnp.asarray(alpha, dt) * ramp_t
+    scal = dict(hot_frac=jnp.asarray(hot_frac, dt),
+                w_cap=jnp.asarray(w_cap, dt),
+                cap_beta=jnp.asarray(cap_beta, dt),
+                cap_frac=jnp.asarray(cap_frac, dt))
+    # node-indexed per-link constants (host reference) and their
+    # slot-indexed twins (device loop) — same value per real link, so the
+    # two paths' elementwise updates agree bitwise
+    link_w_node = np.ones(f.n_max)
+    if rho_weighted:
+        link_w_node = np.zeros(f.n_max)
+        link_w_node[:n] = rho0
+    link_w_node = jnp.asarray(link_w_node, dt)
+    link_w_slot = base_edge[0] if rho_weighted else jnp.ones(f.n_slots, dt)
+    cap_node = np.ones(f.n_max)
+    cap_slot = np.ones(f.n_slots)
+    if priced:
+        cap_node[:n] = capacity
+        real0 = f.slot_node[0] >= 0
+        cap_slot = np.where(real0, cap_node[np.maximum(f.slot_node[0], 0)],
+                            1.0)
+    cap_node = jnp.asarray(cap_node, dt)
+    cap_slot = jnp.asarray(cap_slot, dt)
 
-    w = np.ones((T, n))
-    best = None                       # (cmax, total_util, round, state...)
-    history: list[float] = []
-    rounds_log: list | None = [] if record_rounds else None
-    prof0 = None                      # round-0 per-link profile (baseline)
-    stale = 0
-    rounds = 0
-    for r in range(max_rounds):
-        if r == 0:
-            trees = [tree] * T
-            rho_eff = np.broadcast_to(rho0, (T, n))
-        else:
-            rho_eff = rho0[None, :] * w
-            trees = [Tree(tree.parent, rho_eff[t]) for t in range(T)]
-        f = build_forest(trees, list(loads), avails)
-        res = solve_forest(f, k, **engine_kw)
-        blue = res.blue[:, :n].copy()
-        msgs = messages_up_forest(f, res.blue)[:, :n]
-        prof = congestion_profile(msgs, cong_w)
-        cmax = float(prof.max())
-        util = (msgs * rho0).sum(axis=1).astype(np.float64)
-        history.append(cmax)
-        rounds = r + 1
-        if r == 0:
-            prof0 = prof
-        if record_rounds:
-            rounds_log.append((np.array(rho_eff, np.float64), blue.copy()))
-        key = (cmax, float(util.sum()))
-        if best is None or key < best[0]:
-            best = (key, r, blue)
-            stale = 0
-        else:
-            stale += 1
-        if cmax == 0 or stale >= patience:
-            break
-        # penalty reweight: boost each tenant's effective rho on hot links
-        # in proportion to that tenant's own traffic share of the hotspot
-        hot = prof >= hot_frac * cmax
-        contrib = (msgs * cong_w if cong_w is not None else msgs) / cmax
-        boost = 1.0 + alpha_t * np.where(hot[None, :], contrib, 0.0)
-        w = _quantize(w * boost, w_cap)
+    if device_loop:
+        state = _run_device(f, k, opts, use_pallas, kid, load, send, avail_d,
+                            par, cidx, root_d, base_edge, anc, valid,
+                            link_w_slot, cap_slot, alpha_t, ramp_t, scal,
+                            patience, max_rounds, record_rounds, priced)
+    else:
+        state = _run_host(tree, loads, avails, f, k, opts, link_w_node,
+                          cap_node, alpha_t, ramp_t, scal, patience,
+                          max_rounds, record_rounds, priced)
+    (blue_node, best_round, rounds, history, prof0_node, rounds_log,
+     bytes_to_host) = state
 
-    _, best_round, blue = best
+    blue = blue_node[:, :n]
     # the reported statistics come from the one shared measurement recipe
     # (measure_fleet — same code path the orchestrator's post-admission
     # re-measure uses); its host sweep is bit-identical to the device
     # messages the loop tracked, so nothing shifts in the hand-off
     m = measure_fleet(tree, list(loads), list(blue), rho_weighted)
-    base0 = prof0[prof0 > 0]
+    base0 = prof0_node[prof0_node > 0]
     return CongestionResult(
         blue=blue, costs=m.costs, msgs=m.msgs, congestion=m.congestion,
         max_congestion=m.max_congestion,
         mean_congestion=m.mean_congestion,
         baseline_max=float(history[0]),
-        baseline_mean=float(base0.mean()) if base0.size else 0.0,
+        baseline_mean=float(base0.astype(np.float64).mean())
+        if base0.size else 0.0,
         rounds=rounds, best_round=best_round, history=history,
-        rounds_log=rounds_log)
+        rounds_log=rounds_log, bytes_to_host=bytes_to_host)
+
+
+def _slots_to_nodes_np(x_slot: np.ndarray, f) -> np.ndarray:
+    """Host twin of the engine's slot->node gather (padding reads 0)."""
+    B = x_slot.shape[0]
+    pad = np.concatenate(
+        [x_slot, np.zeros((B, 1), x_slot.dtype)], axis=1)
+    return np.take_along_axis(pad, f.slot_of, axis=1)
+
+
+def _run_device(f, k, opts, use_pallas, kid, load, send, avail_d, par, cidx,
+                root_d, base_edge, anc, valid, link_w_slot, cap_slot,
+                alpha_t, ramp_t, scal, patience, max_rounds, record_rounds,
+                priced):
+    """Dispatch the resident loop; pull the final state once."""
+    n = int(f.n[0])
+    out = _device_driver(
+        kid, load, send, avail_d, par, cidx, root_d,
+        base_edge, anc, valid, link_w_slot, cap_slot, alpha_t, ramp_t,
+        scal["hot_frac"], scal["w_cap"], scal["cap_beta"], scal["cap_frac"],
+        jnp.int32(patience),
+        lvl_off=f.lvl_off, lvl_width=f.lvl_width,
+        lvl_internal=f.lvl_internal, lvl_sub=f.lvl_sub,
+        k=k, cap=bool(opts.cap), use_pallas=bool(use_pallas),
+        interpret=bool(opts.interpret), max_rounds=int(max_rounds),
+        record=bool(record_rounds), priced=priced)
+    best_blue_s, best_round_d, rounds_d, hist_d, prof0_s, log_rho, log_blue \
+        = (np.asarray(x) for x in out)
+    bytes_to_host = sum(int(x.nbytes) for x in
+                        (best_blue_s, best_round_d, rounds_d, hist_d,
+                         prof0_s, log_rho, log_blue))
+    rounds = int(rounds_d)
+    best_round = int(best_round_d)
+    history = [float(c) for c in hist_d[:rounds]]
+    blue_node = _slots_to_nodes_np(best_blue_s, f)
+    prof0_node = _slots_to_nodes_np(prof0_s[None, :], f)[0]
+    rounds_log = None
+    if record_rounds:
+        rounds_log = []
+        for r in range(rounds):
+            rho_eff = _slots_to_nodes_np(
+                log_rho[r], f).astype(np.float64)[:, :n]
+            rounds_log.append(
+                (rho_eff, _slots_to_nodes_np(log_blue[r], f)[:, :n]))
+    return (blue_node, best_round, rounds, history, prof0_node, rounds_log,
+            bytes_to_host)
+
+
+def _run_host(tree, loads, avails, f, k, opts, link_w_node,
+              cap_node, alpha_t, ramp_t, scal, patience, max_rounds,
+              record_rounds, priced):
+    """Host-driven parity reference: one round per step, everything pulled.
+
+    Runs the *same* jitted round arithmetic as the device loop — the
+    solve goes through the public :func:`~repro.engine.solve_forest`
+    ``rho_scale`` override (node-indexed weights), measurement and
+    reweight through the shared jitted steps — but the loop control,
+    best tracking and history live on the host, and each round retains
+    the PR 3 driver's serving pattern: re-pack the Forest, re-upload the
+    packed arrays, pull the masks, message counts and C_max back down
+    (the transfer/packing bill the device loop exists to eliminate; the
+    rebuilt arrays are bit-identical, so parity is unaffected).
+    """
+    from ..core.congestion import messages_up_forest
+    from .batched import solve_forest
+
+    T, n_max = f.mask.shape
+    dt = np.dtype(opts.dtype)
+    base_edge_node = jnp.asarray(
+        np.where(np.isfinite(f.rho_up[:, :, 1]), f.rho_up[:, :, 1], 0.0), dt)
+    w = jnp.ones((T, n_max), dt)
+    best = None                     # (cmax, round, blue)
+    history: list[float] = []
+    rounds_log: list | None = [] if record_rounds else None
+    prof0_node = None
+    bytes_to_host = 0
+    stale = 0
+    rounds = 0
+    for r in range(max_rounds):
+        fr = build_forest([tree] * T, list(loads), avails)  # PR 3: per round
+        res = solve_forest(fr, k, options=opts, rho_scale=w)
+        blue = res.blue
+        bytes_to_host += res.bytes_to_host
+        msgs64 = messages_up_forest(fr, blue)
+        msgs = jnp.asarray(msgs64.astype(np.int32))
+        bytes_to_host += msgs.nbytes
+        prof_d, cmax_d = _profile_step(msgs, link_w_node)
+        cmax = float(cmax_d)
+        bytes_to_host += 4
+        history.append(cmax)
+        rounds = r + 1
+        if r == 0:
+            prof0_node = np.asarray(prof_d)
+            bytes_to_host += prof0_node.nbytes
+        if record_rounds:
+            rho_eff = np.asarray(_edge_scale(base_edge_node, w))
+            bytes_to_host += rho_eff.nbytes
+            rounds_log.append((rho_eff.astype(np.float64)[:, : int(f.n[0])],
+                               blue[:, : int(f.n[0])].copy()))
+        if best is None or cmax < best[0]:           # strict: earliest wins
+            best = (cmax, r, blue)
+            stale = 0
+        else:
+            stale += 1
+        if cmax == 0 or stale >= patience:
+            break
+        w = _reweight_step(w, msgs, prof_d, cmax_d, jnp.asarray(blue),
+                           alpha_t, ramp_t, scal["hot_frac"], scal["w_cap"],
+                           link_w_node, cap_node, scal["cap_beta"],
+                           scal["cap_frac"], priced=priced)
+    _, best_round, blue_node = best
+    return (blue_node, best_round, rounds, history, prof0_node, rounds_log,
+            bytes_to_host)

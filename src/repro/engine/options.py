@@ -1,0 +1,106 @@
+"""Typed engine options — the planner API's single options surface.
+
+PR 1–3 threaded a ``**engine_kw`` kwargs-soup through three layers
+(``plan_batch`` → ``solve_batch`` → ``solve_forest``): a misspelled option
+surfaced as a ``TypeError`` deep inside the engine (or, worse, was
+silently swallowed by an intermediate ``**kw``). :class:`EngineOptions`
+replaces that with one frozen dataclass validated at the call boundary:
+
+    solve_batch(trees, loads, k, options=EngineOptions(cap=False))
+    plan_batch(topos, k, options=EngineOptions(dtype=jnp.float64))
+
+Unknown or misspelled fields fail immediately in the ``EngineOptions``
+constructor (with a did-you-mean hint via :func:`resolve_options`), and a
+frozen instance hashes/compares by value, so it can key jit caches
+directly. The old kwargs spelling still works for one release through
+:func:`resolve_options` — it raises a :class:`DeprecationWarning` naming
+the migration, and CI runs a ``-W error::DeprecationWarning`` job so
+internal callers cannot quietly keep using it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import warnings
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Options consumed by ``solve_forest`` / ``solve_batch`` and everything
+    layered on top (``solve_congestion``, ``plan`` / ``plan_batch``).
+
+    dtype:        DP table dtype (float32 default; pass ``jnp.float64``
+                  under ``jax_enable_x64`` for exactness on arbitrary rates)
+    use_pallas:   None = auto (Pallas level-fold kernel on TPU, fused jnp
+                  elsewhere); True/False forces a backend
+    interpret:    run the Pallas kernel body in Python (CPU validation)
+    cap:          min(k, subtree) per-level budget-width truncation
+    color:        False = costs-only mode (no traceback, no masks)
+    debug_tables: full-table pullback + host-numpy color (PR 1 path)
+    """
+
+    dtype: Any = jnp.float32
+    use_pallas: bool | None = None
+    interpret: bool = False
+    cap: bool = True
+    color: bool = True
+    debug_tables: bool = False
+
+    def replace(self, **changes) -> "EngineOptions":
+        """A copy with ``changes`` applied (validated like the ctor)."""
+        return dataclasses.replace(self, **changes)
+
+
+_FIELDS = tuple(f.name for f in dataclasses.fields(EngineOptions))
+
+_DEPRECATION = (
+    "passing engine options as keyword arguments ({names}) is deprecated; "
+    "pass options=EngineOptions({example}) instead — the kwargs spelling "
+    "will be removed next release"
+)
+
+
+def resolve_options(options: EngineOptions | None,
+                    engine_kw: dict,
+                    where: str,
+                    stacklevel: int = 3) -> EngineOptions:
+    """Merge the new ``options=`` spelling with the deprecated kwargs shim.
+
+    * ``options`` alone → returned as-is (defaults when None);
+    * legacy kwargs alone → validated against the :class:`EngineOptions`
+      fields (unknown names raise ``TypeError`` *here*, at the call
+      boundary, with a did-you-mean hint) and converted, with a
+      ``DeprecationWarning`` pointing at the caller;
+    * both at once → ``TypeError`` (ambiguous precedence is never guessed).
+    """
+    if not engine_kw:
+        if options is None:
+            return EngineOptions()
+        if not isinstance(options, EngineOptions):
+            raise TypeError(f"{where}: options must be an EngineOptions, "
+                            f"got {type(options).__name__}")
+        return options
+    if options is not None:
+        raise TypeError(
+            f"{where}: got both options= and legacy engine keyword "
+            f"arguments {sorted(engine_kw)} — pass everything through "
+            "options=EngineOptions(...)")
+    unknown = [k for k in engine_kw if k not in _FIELDS]
+    if unknown:
+        hints = []
+        for k in unknown:
+            close = difflib.get_close_matches(k, _FIELDS, n=1)
+            hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                     if close else ""))
+        raise TypeError(
+            f"{where}: unknown engine option(s) {', '.join(hints)}; "
+            f"valid options: {', '.join(_FIELDS)}")
+    warnings.warn(
+        _DEPRECATION.format(
+            names=", ".join(sorted(engine_kw)),
+            example=", ".join(f"{k}=..." for k in sorted(engine_kw))),
+        DeprecationWarning, stacklevel=stacklevel)
+    return EngineOptions(**engine_kw)

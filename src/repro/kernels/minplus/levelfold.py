@@ -82,6 +82,43 @@ def chain_fold(st: jax.Array, collect: bool = False):
     return last, jnp.concatenate([st[:1], partials], axis=0)
 
 
+def rho_up_from_edges(rho_edge: jax.Array, anc: jax.Array,
+                      valid: jax.Array) -> jax.Array:
+    """Recompute the packed rho-up table from per-edge rates, on device.
+
+    The congestion driver re-solves one prebuilt Forest every round under
+    penalty-reweighted *edge* rates; repacking the ``(B, S, h+2)``
+    cumulative table on the host (as ``Tree.rho_up_table`` does) would
+    drag the loop off the accelerator. This recomputes it from the slot
+    layout instead:
+
+        rho_up[b, s, ell] = sum_{j < ell} rho_edge[b, anc[b, s, j]]
+
+    ``rho_edge``: (B, S) effective up-edge rate per slot (finite
+    everywhere — padded slots carry 0); ``anc``: (B, S, h_max+1) int32,
+    ``anc[b, s, j]`` = slot of the j-th ancestor of s (j=0 is s itself;
+    entries past the root point at slot 0 and are masked); ``valid``:
+    (B, S, h_max+2) bool — True exactly where the host table is finite.
+    Returns (B, S, h_max+2) with ``BIG`` at invalid entries.
+
+    The accumulation order is one edge per hop, left to right — the
+    *same* per-node association as the host ``Tree.rho_up_table`` walk —
+    so on rates that are exactly representable (the dyadic-quantized
+    penalty weights on dyadic-rho trees) the result is bit-identical to
+    packing the host table and casting. Masked lanes accumulate finite
+    garbage (real edge rates, never BIG) that the mask discards.
+    """
+    B, S = rho_edge.shape
+    dt = rho_edge.dtype
+    H2 = valid.shape[2]
+    acc = jnp.zeros((B, S), dt)
+    rows = [jnp.where(valid[:, :, 0], acc, BIG)]
+    for ell in range(1, H2):
+        acc = acc + jnp.take_along_axis(rho_edge, anc[:, :, ell - 1], axis=1)
+        rows.append(jnp.where(valid[:, :, ell], acc, BIG))
+    return jnp.stack(rows, axis=2)
+
+
 def _minplus_loop(a: jax.Array, b: jax.Array) -> jax.Array:
     """minplus_fused spelled as a fori_loop (for kernel bodies).
 

@@ -163,6 +163,7 @@ class Orchestrator:
         return prog
 
     def begin_workloads(self, count: int, congestion_aware: bool = False,
+                        capacity_priced: bool = False,
                         **driver_kw) -> list[ReduceProgram]:
         """Admit ``count`` workloads with one batched engine solve.
 
@@ -182,17 +183,33 @@ class Orchestrator:
         diagnostics land in ``self.last_congestion`` (re-measured against
         the *admitted* placements when collision fallbacks replaced any
         driver placement, so it never overstates the fleet); extra keyword
-        arguments (``max_rounds``, ``alpha``, ``rho_weighted``, …) pass
-        through to it. Requires ``strategy="soar"``.
+        arguments (``max_rounds``, ``alpha``, ``rho_weighted``,
+        ``device_loop``, …) pass through to it. Requires
+        ``strategy="soar"``.
+
+        ``capacity_priced=True`` (congestion-aware only) additionally
+        hands the driver the orchestrator's *residual capacity snapshot*
+        as its capacity-pricing signal: switches this admission wave is
+        about to exhaust get priced up inside the penalty loop, steering
+        tenants away *before* the claim accounting collides — fewer
+        serial collision fallbacks, same bounded-capacity guarantee.
         """
         if self._residual is None:
             raise ValueError("begin_workloads needs capacity set")
         if congestion_aware and self.cfg.strategy != "soar":
             raise ValueError("congestion-aware admission needs "
                              f"strategy='soar', not {self.cfg.strategy!r}")
-        if not congestion_aware and driver_kw:
-            raise ValueError(f"driver options {sorted(driver_kw)} only "
+        if not congestion_aware and (driver_kw or capacity_priced):
+            what = sorted(driver_kw) if driver_kw else "capacity_priced"
+            raise ValueError(f"driver options {what} only "
                              "apply with congestion_aware=True")
+        if capacity_priced:
+            if "capacity" in driver_kw:
+                raise ValueError("capacity_priced=True supplies the "
+                                 "orchestrator's residual-capacity snapshot; "
+                                 "don't also pass capacity= explicitly")
+            driver_kw = dict(driver_kw,
+                             capacity=self._residual.astype(np.float64))
         if count == 0:
             return []
         snapshot = self._avail()

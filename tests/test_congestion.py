@@ -14,7 +14,7 @@ from repro.core.forest import build_forest
 from repro.core.reduce import phi
 from repro.core.soar import soar
 from repro.core.tree import DEST, Tree, sample_load
-from repro.engine import solve_batch, solve_congestion
+from repro.engine import EngineOptions, solve_batch, solve_congestion
 from repro.runtime import Orchestrator, OrchestratorConfig
 
 
@@ -172,9 +172,13 @@ def test_driver_input_validation():
     with pytest.raises(ValueError):
         solve_congestion(t, [L], 2, max_rounds=0)
     with pytest.raises(ValueError):
-        solve_congestion(t, [L], 2, color=False)
+        solve_congestion(t, [L], 2, options=EngineOptions(color=False))
+    with pytest.raises(ValueError):
+        solve_congestion(t, [L], 2, options=EngineOptions(debug_tables=True))
     with pytest.raises(ValueError):
         solve_congestion(t, [L, L], 2, avail=[None])
+    with pytest.raises(ValueError):
+        solve_congestion(t, [L], 2, capacity=np.ones(3))   # shape != (n,)
 
 
 def test_rho_weighted_congestion_mode():

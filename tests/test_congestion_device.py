@@ -1,0 +1,176 @@
+"""Device-resident congestion loop vs host reference — bit parity — plus
+the unified planner API (EngineOptions / TenantPlan / CongestionPlan).
+
+The device loop (one jitted ``lax.while_loop``) and the host driver run
+the same jitted float32 round arithmetic, so with ``record_rounds=True``
+they must agree round for round *bitwise*: same effective rho, same
+masks, same C_max history, same best round. Not approximately — exactly
+(see the parity notes in ``engine/congestion.py``).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.collectives import (CongestionPlan, TenantPlan, fleet_tree,
+                               plan, plan_batch, plan_congestion)
+from repro.core import bt
+from repro.core.tree import sample_load
+from repro.engine import EngineOptions, solve_congestion
+from repro.runtime import Orchestrator, OrchestratorConfig
+
+
+def _fleet(n=64, T=8, scheme="constant"):
+    t = bt(n, scheme)
+    loads = [sample_load(t, "power-law", seed=100 + s) for s in range(T)]
+    return t, loads
+
+
+def _assert_bit_identical(dev, host):
+    assert dev.history == host.history                  # f32 C_max, exact
+    assert dev.rounds == host.rounds
+    assert dev.best_round == host.best_round
+    assert np.array_equal(dev.blue, host.blue)
+    assert dev.baseline_max == host.baseline_max
+    assert dev.baseline_mean == host.baseline_mean
+    assert dev.max_congestion == host.max_congestion
+    assert np.array_equal(dev.msgs, host.msgs)
+    for r, ((dr, db), (hr, hb)) in enumerate(
+            zip(dev.rounds_log, host.rounds_log, strict=True)):
+        assert np.array_equal(dr, hr), f"rho_eff differs at round {r}"
+        assert np.array_equal(db, hb), f"masks differ at round {r}"
+
+
+@pytest.mark.parametrize("config", ["plain", "rho_weighted", "avail",
+                                    "priced"])
+def test_device_loop_bit_identical_to_host_reference(config):
+    t, loads = _fleet()
+    kw = {}
+    if config == "rho_weighted":
+        kw = dict(rho_weighted=True)
+    elif config == "avail":
+        av = np.ones(t.n, bool)
+        av[5:9] = False
+        kw = dict(avail=[av if i % 2 else None for i in range(len(loads))])
+    elif config == "priced":
+        kw = dict(capacity=np.full(t.n, 3.0), cap_beta=1.5, cap_frac=0.5)
+    dev = solve_congestion(t, loads, 4, record_rounds=True,
+                           device_loop=True, **kw)
+    host = solve_congestion(t, loads, 4, record_rounds=True,
+                            device_loop=False, **kw)
+    _assert_bit_identical(dev, host)
+
+
+def test_device_loop_bit_identical_on_nondyadic_rates():
+    # linear rates (1/(1+level)) are NOT exactly float32-representable, so
+    # this checks the two paths share rounding, not that rounding is absent
+    t, loads = _fleet(scheme="linear")
+    dev = solve_congestion(t, loads, 4, record_rounds=True,
+                           rho_weighted=True, device_loop=True)
+    host = solve_congestion(t, loads, 4, record_rounds=True,
+                            rho_weighted=True, device_loop=False)
+    _assert_bit_identical(dev, host)
+
+
+def test_device_loop_transfer_accounting():
+    """The point of the resident loop: O(1) transfer per *call*, not per
+    round — strictly less than the host driver's per-round pulls."""
+    t, loads = _fleet(n=128, T=16)
+    dev = solve_congestion(t, loads, 8, device_loop=True)
+    host = solve_congestion(t, loads, 8, device_loop=False)
+    assert dev.history == host.history                 # same trajectory
+    assert dev.rounds == host.rounds >= 2
+    assert 0 < dev.bytes_to_host < host.bytes_to_host
+    # the device bill does not grow with the round count: masks + scalars
+    T, S = len(loads), dev.blue.shape[1]
+    assert dev.bytes_to_host < 4 * T * S + 4 * len(dev.history) * T + 4096
+
+
+def test_capacity_pricing_steers_off_crowded_switches():
+    """With per-switch capacity below the tenant count, pricing must cut
+    the peak number of tenants stacked on one switch vs the unpriced run
+    (that is the signal the orchestrator feeds it for)."""
+    t, loads = _fleet(n=64, T=12)
+    base = solve_congestion(t, loads, 4)
+    priced = solve_congestion(t, loads, 4, capacity=np.full(t.n, 2.0),
+                              cap_beta=4.0, cap_frac=0.5)
+    peak = lambda r: int(r.blue.sum(axis=0).max())
+    assert peak(priced) <= peak(base)
+    # pricing shapes the search, never the reported objective: the result
+    # is still monotone-best against its own utilization-only baseline
+    assert priced.max_congestion <= priced.baseline_max
+
+
+def test_driver_rejects_options_kwargs_mix_and_unknown():
+    t, loads = _fleet(n=16, T=2)
+    with pytest.raises(TypeError, match="both options="):
+        solve_congestion(t, loads, 2, options=EngineOptions(), cap=False)
+    with pytest.raises(TypeError, match="did you mean 'use_pallas'"):
+        solve_congestion(t, loads, 2, use_palas=True)
+    with pytest.warns(DeprecationWarning, match="EngineOptions"):
+        solve_congestion(t, loads, 2, cap=True, max_rounds=2)
+
+
+def test_plan_batch_options_boundary():
+    topo = fleet_tree(2, 2, 4)
+    with pytest.raises(TypeError, match="did you mean 'dtype'"):
+        plan_batch([topo], 2, dtyp=np.float32)
+    with pytest.raises(TypeError, match="both options="):
+        plan_batch([topo], 2, options=EngineOptions(), cap=False)
+    with pytest.warns(DeprecationWarning):
+        legacy = plan_batch([topo], 2, cap=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                 # new spelling: clean
+        new = plan_batch([topo], 2, options=EngineOptions(cap=True))
+    assert np.array_equal(legacy[0].blue, new[0].blue)
+    # engine options make no sense for the serial baselines
+    with pytest.raises(ValueError, match="only apply to"):
+        plan_batch([topo], 2, strategy="top", options=EngineOptions())
+
+
+def test_plan_returns_tenant_plan_and_delegates_to_engine():
+    topo = fleet_tree(2, 4, 4)
+    tp = plan(topo, 3, options=EngineOptions())
+    assert isinstance(tp, TenantPlan)
+    blue, prog = tp                                    # legacy unpacking
+    assert blue is tp.blue and prog is tp.program
+    assert tp.cost == prog.utilization
+    # the single-topology path IS a batch of one now (identical masks —
+    # historically plan() ran the serial solver and ignored options)
+    batched = plan_batch([topo], 3)[0]
+    assert np.array_equal(tp.blue, batched.blue)
+    assert tp.cost == batched.cost
+    # baselines still reject engine options
+    with pytest.raises(ValueError):
+        plan(topo, 3, strategy="top", options=EngineOptions())
+
+
+def test_plan_congestion_returns_congestion_plan():
+    topo = fleet_tree(2, 4, 4)
+    cp = plan_congestion(topo, 3, count=4, max_rounds=4)
+    assert isinstance(cp, CongestionPlan)
+    planned, res = cp                                  # legacy unpacking
+    assert planned is cp.plans and res is cp.result
+    assert len(cp.plans) == 4
+    assert all(isinstance(p, TenantPlan) for p in cp.plans)
+    assert cp.max_congestion == res.max_congestion
+    assert cp.improvement == res.improvement
+    for p in cp.plans:
+        assert p.cost == p.program.utilization
+
+
+def test_orchestrator_capacity_priced_admission():
+    topo = fleet_tree(2, 4, 4)
+    orch = Orchestrator(topo, OrchestratorConfig(k=4, capacity=2))
+    progs = orch.begin_workloads(3, congestion_aware=True,
+                                 capacity_priced=True)
+    assert len(progs) == 3
+    assert (orch._residual >= 0).all()
+    assert orch.last_congestion is not None
+    # the flag is congestion-aware only, and owns the capacity signal
+    orch2 = Orchestrator(topo, OrchestratorConfig(k=4, capacity=2))
+    with pytest.raises(ValueError, match="congestion_aware"):
+        orch2.begin_workloads(2, capacity_priced=True)
+    with pytest.raises(ValueError, match="residual-capacity snapshot"):
+        orch2.begin_workloads(2, congestion_aware=True, capacity_priced=True,
+                              capacity=np.ones(topo.tree.n))

@@ -12,8 +12,8 @@ import numpy as np
 from repro.core.forest import build_forest, layout_key
 from repro.core.soar import soar
 from repro.core.tree import DEST, Tree
-from repro.engine import (cache_stats, color_batch, gather_batch,
-                          solve_forest)
+from repro.engine import (EngineOptions, cache_stats, color_batch,
+                          gather_batch, solve_forest)
 from repro.testing import given, settings, st
 
 
@@ -43,7 +43,7 @@ def test_device_color_bit_identical(inst):
     f = build_forest(trees, loads, avails)
     for k in sorted({0, 1, n_max}):
         dev = solve_forest(f, k)
-        host = solve_forest(f, k, debug_tables=True)
+        host = solve_forest(f, k, options=EngineOptions(debug_tables=True))
         assert np.array_equal(dev.blue, host.blue)       # bit-identical
         assert np.array_equal(dev.costs, host.costs)
         for b, t in enumerate(trees):
@@ -66,8 +66,8 @@ def test_budget_cap_is_exact():
         avails.append(rng.random(n) < 0.6)
     f = build_forest(trees, loads, avails)
     for k in (1, 4, 9):
-        capped = solve_forest(f, k, cap=True)
-        full = solve_forest(f, k, cap=False)
+        capped = solve_forest(f, k, options=EngineOptions(cap=True))
+        full = solve_forest(f, k, options=EngineOptions(cap=False))
         assert np.array_equal(capped.costs, full.costs)
         assert np.array_equal(capped.blue, full.blue)
 
@@ -83,7 +83,7 @@ def test_debug_tables_escape_hatch():
     t = Tree(parent, rng.integers(1, 32, size=n) / 8.0)
     loads = [rng.integers(0, 7, size=n) for _ in range(B)]
     f = build_forest([t] * B, loads)
-    dbg = solve_forest(f, k, debug_tables=True)
+    dbg = solve_forest(f, k, options=EngineOptions(debug_tables=True))
     dev = solve_forest(f, k)
     # the hatch exposes node-indexed tables identical to gather_batch, and
     # host color over them equals the device traceback

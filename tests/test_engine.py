@@ -13,7 +13,7 @@ from repro.core.reduce import phi
 from repro.core.soar import soar
 from repro.core.soar_fast import soar_fast
 from repro.core.tree import DEST, Tree
-from repro.engine import solve_batch, solve_forest
+from repro.engine import EngineOptions, solve_batch, solve_forest
 
 
 def _random_ragged(rng, n_lo=1, n_hi=24, max_span=None):
@@ -107,7 +107,7 @@ def test_costs_only_mode():
     t = bt(32, "constant")
     loads = [sample_load(t, "power-law", seed=s) for s in range(4)]
     f = build_forest([t] * 4, loads)
-    res = solve_forest(f, 4, color=False)
+    res = solve_forest(f, 4, options=EngineOptions(color=False))
     assert res.blue is None
     with pytest.raises(ValueError):
         res.blue_of(0)
@@ -123,8 +123,10 @@ def test_pallas_and_fused_paths_agree():
         trees.append(t)
         loads.append(load)
         avails.append(avail)
-    a = solve_batch(trees, loads, 2, avails, use_pallas=True, interpret=True)
-    b = solve_batch(trees, loads, 2, avails, use_pallas=False)
+    a = solve_batch(trees, loads, 2, avails,
+                    options=EngineOptions(use_pallas=True, interpret=True))
+    b = solve_batch(trees, loads, 2, avails,
+                    options=EngineOptions(use_pallas=False))
     assert np.array_equal(a.costs, b.costs)
     assert np.array_equal(a.blue, b.blue)
 
