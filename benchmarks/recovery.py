@@ -1,0 +1,182 @@
+"""Recovery-path benchmark: preplan cache vs engine solves, degraded mode.
+
+Three measurements on the fault-tolerant orchestrator:
+
+  * **preplanned switch-failure recovery** — preplan every single-switch
+    failure (:meth:`Orchestrator.preplan_switch_failures`), then fail and
+    repair each switch in turn, against a control orchestrator with no
+    preplanning. Reports the fraction of recoveries the cache served
+    without an engine solve and the cached vs solved recovery latency;
+  * **degraded-mode premium** — for every failure of a *blue* switch, the
+    utilization regression of the immediate no-solve degraded program over
+    the subsequently replanned one (how much utilization the instant
+    fallback costs while the replan lands);
+  * **chaos throughput** — a seeded mixed scenario (default 50 events)
+    through :class:`ChaosHarness` with every invariant checked per event,
+    reported as events/sec.
+
+Emits ``BENCH_recovery.json`` + a CSV. Asserts the acceptance bars: the
+preplan cache serves at least ``MIN_HIT_RATE`` (50%) of single-switch
+recoveries without a solve, and the chaos scenario completes with all
+invariant checks passing (the harness raises otherwise).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.collectives import fleet_tree
+from repro.runtime import (ChaosHarness, Orchestrator, OrchestratorConfig,
+                           generate_scenario)
+
+from .common import fmt_table, out_path, write_csv
+
+N_PODS = 4
+RACKS = 4
+CHIPS = 4
+K = 6
+CAPACITY = 2
+EVENTS = 50
+SEED = 0
+MIN_HIT_RATE = 0.5    # acceptance: cache serves >= 50% of switch recoveries
+
+
+def _bench_preplanned_switch_recovery(topo, cfg):
+    """Fail+repair every switch once, preplanned vs control."""
+    orch = Orchestrator(topo, cfg)
+    t0 = time.perf_counter()
+    orch.preplan_switch_failures()
+    preplan_s = time.perf_counter() - t0
+    control = Orchestrator(topo, cfg)
+
+    rows, hit_lat, miss_lat = [], [], []
+    for s in range(topo.tree.n):
+        hits0 = orch.preplan_cache_stats()["hits"]
+        t0 = time.perf_counter()
+        orch.on_switch_failure([s])
+        dt = time.perf_counter() - t0
+        hit = orch.preplan_cache_stats()["hits"] > hits0
+        (hit_lat if hit else miss_lat).append(dt)
+
+        t0 = time.perf_counter()
+        control.on_switch_failure([s])
+        control_dt = time.perf_counter() - t0
+        assert control.program.utilization == orch.program.utilization
+
+        rows.append([s, int(hit), dt * 1e3, control_dt * 1e3])
+        orch.on_switch_recover([s])
+        control.on_switch_recover([s])
+
+    n = topo.tree.n
+    hit_rate = len(hit_lat) / n
+    return {
+        "switches": n,
+        "preplan_seconds": preplan_s,
+        "hit_rate": hit_rate,
+        "replans_avoided": len(hit_lat),
+        "cached_recovery_ms": float(np.mean(hit_lat)) * 1e3 if hit_lat
+        else None,
+        "solved_recovery_ms": float(np.mean(miss_lat)) * 1e3 if miss_lat
+        else None,
+        "control_replans": control.replans,
+        "preplanned_replans": orch.replans,
+    }, rows
+
+
+def _bench_degraded_premium(topo, cfg):
+    """Fail each initially-blue switch; measure the degraded-mode premium."""
+    premiums = []
+    for s in np.nonzero(Orchestrator(topo, cfg).blue)[0]:
+        orch = Orchestrator(topo, cfg)
+        orch.on_switch_failure([int(s)])
+        ev = orch.degraded_events[-1]
+        premiums.append(ev["degraded_utilization"] / ev["utilization"] - 1.0)
+    return {
+        "blue_switches": len(premiums),
+        "mean_premium": float(np.mean(premiums)) if premiums else 0.0,
+        "max_premium": float(np.max(premiums)) if premiums else 0.0,
+    }
+
+
+def _bench_chaos(topo, cfg, events, seed):
+    scenario = generate_scenario(topo, n_events=events, seed=seed, cfg=cfg)
+    orch = Orchestrator(topo, cfg)
+    orch.preplan_switch_failures()
+    report = ChaosHarness(orch, verify_cache_hits=True).run(scenario)
+    return {
+        "events": report.events,
+        "replans": report.replans,
+        "cache_hits": report.cache_hits,
+        "stale": report.stale,
+        "invariant_checks": report.invariant_checks,
+        "seconds": report.seconds,
+        "events_per_sec": report.events_per_sec,
+    }
+
+
+def run(n_pods: int = N_PODS, racks: int = RACKS, chips: int = CHIPS,
+        k: int = K, capacity: int = CAPACITY, events: int = EVENTS,
+        seed: int = SEED, quiet: bool = False):
+    topo = fleet_tree(n_pods, racks, chips)
+    cfg = OrchestratorConfig(k=k, capacity=capacity)
+
+    switch, rows = _bench_preplanned_switch_recovery(topo, cfg)
+    degraded = _bench_degraded_premium(topo, cfg)
+    chaos = _bench_chaos(topo, cfg, events, seed)
+
+    write_csv("BENCH_recovery.csv",
+              ["switch", "cache_hit", "recovery_ms", "control_ms"], rows)
+    payload = {
+        "n_pods": n_pods, "racks_per_pod": racks, "chips_per_rack": chips,
+        "k": k, "capacity": capacity, "chaos_events": events, "seed": seed,
+        "switch_recovery": switch,
+        "degraded_mode": degraded,
+        "chaos": chaos,
+    }
+    with open(out_path("BENCH_recovery.json"), "w") as fh:
+        json.dump(payload, fh, indent=2)
+
+    if not quiet:
+        print(fmt_table(["switch", "hit", "ms", "control_ms"], rows,
+                        max_rows=12))
+        print(f"\npreplan: {switch['switches']} scenarios in "
+              f"{switch['preplan_seconds']:.2f}s (one batched solve)")
+        print(f"cache hit rate: {switch['hit_rate']:.0%} "
+              f"({switch['replans_avoided']}/{switch['switches']} recoveries "
+              f"without a solve)")
+        if switch["cached_recovery_ms"] is not None:
+            line = f"cached recovery: {switch['cached_recovery_ms']:.2f}ms"
+            if switch["solved_recovery_ms"] is not None:
+                line += f" vs solved {switch['solved_recovery_ms']:.2f}ms"
+            print(line)
+        print(f"degraded-mode premium over replanned: "
+              f"mean {degraded['mean_premium']:.1%}, "
+              f"max {degraded['max_premium']:.1%} "
+              f"({degraded['blue_switches']} blue switches)")
+        print(f"chaos: {chaos['events']} events, {chaos['replans']} solves, "
+              f"{chaos['cache_hits']} cache hits, "
+              f"{chaos['invariant_checks']} invariant checks, "
+              f"{chaos['events_per_sec']:.0f} events/s")
+
+    assert switch["hit_rate"] >= MIN_HIT_RATE, (
+        f"preplan cache served {switch['hit_rate']:.0%} of single-switch "
+        f"recoveries, need >= {MIN_HIT_RATE:.0%}")
+    assert chaos["invariant_checks"] == events
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=EVENTS)
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--pods", type=int, default=N_PODS)
+    ap.add_argument("--k", type=int, default=K)
+    args = ap.parse_args(argv)
+    run(n_pods=args.pods, k=args.k, events=args.events, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

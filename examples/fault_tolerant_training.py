@@ -6,12 +6,17 @@ Demonstrates the full runtime story on 8 simulated devices:
      training continues on the survivors;
   3. the process "crashes" (we stop), then resumes exactly from the last
      checkpoint;
-  4. a persistent straggler is quarantined by the deadline policy.
+  4. a persistent straggler is quarantined by the deadline policy;
+  5. chaos: a seeded fault scenario (switch/link faults, rack failures,
+     straggler storms) drives the orchestrator through the preplan cache
+     with every safety invariant checked after each event.
 
 Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+      [--skip-training] [--chaos N] [--seed S]
 (The script re-executes itself with XLA_FLAGS so the 8 fake devices are
 installed before jax initializes.)
 """
+import argparse
 import os
 import shutil
 import subprocess
@@ -28,33 +33,43 @@ if os.environ.get("XLA_FLAGS", "") != FLAG:
 import numpy as np  # noqa: E402
 
 from repro.launch import train  # noqa: E402
-from repro.runtime import Orchestrator, OrchestratorConfig  # noqa: E402
-from repro.collectives import chip_level_tree  # noqa: E402
+from repro.runtime import (ChaosHarness, Orchestrator,  # noqa: E402
+                           OrchestratorConfig, generate_scenario)
+from repro.collectives import chip_level_tree, fleet_tree  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--skip-training", action="store_true",
+                help="skip phases 1-2 (the actual training runs)")
+ap.add_argument("--chaos", type=int, default=20, metavar="N",
+                help="number of chaos events in phase 5 (0 disables)")
+ap.add_argument("--seed", type=int, default=0)
+args = ap.parse_args()
 
 CKPT = "/tmp/repro_ft_ckpt"
-shutil.rmtree(CKPT, ignore_errors=True)
 
-print("=" * 64)
-print("Phase 1: train 12 steps; chips 3 and 6 fail at steps 5 and 8")
-print("=" * 64)
-train.main([
-    "--arch", "granite-20b", "--reduced", "--steps", "12",
-    "--global-batch", "8", "--seq", "64", "--k", "2",
-    "--fail", "5:3;8:6", "--ckpt-dir", CKPT, "--ckpt-every", "5",
-    "--log-every", "3",
-])
+if not args.skip_training:
+    shutil.rmtree(CKPT, ignore_errors=True)
+    print("=" * 64)
+    print("Phase 1: train 12 steps; chips 3 and 6 fail at steps 5 and 8")
+    print("=" * 64)
+    train.main([
+        "--arch", "granite-20b", "--reduced", "--steps", "12",
+        "--global-batch", "8", "--seq", "64", "--k", "2",
+        "--fail", "5:3;8:6", "--ckpt-dir", CKPT, "--ckpt-every", "5",
+        "--log-every", "3",
+    ])
 
-print()
-print("=" * 64)
-print("Phase 2: 'crash' and resume from the latest checkpoint")
-print("=" * 64)
-train.main([
-    "--arch", "granite-20b", "--reduced", "--steps", "18",
-    "--global-batch", "8", "--seq", "64", "--k", "2",
-    "--ckpt-dir", CKPT, "--resume", "--log-every", "3",
-])
+    print()
+    print("=" * 64)
+    print("Phase 2: 'crash' and resume from the latest checkpoint")
+    print("=" * 64)
+    train.main([
+        "--arch", "granite-20b", "--reduced", "--steps", "18",
+        "--global-batch", "8", "--seq", "64", "--k", "2",
+        "--ckpt-dir", CKPT, "--resume", "--log-every", "3",
+    ])
+    print()
 
-print()
 print("=" * 64)
 print("Phase 3: straggler quarantine (policy demo, no training)")
 print("=" * 64)
@@ -72,3 +87,46 @@ print(f"after quarantine: alive={orch.n_alive}, replans={orch.replans}, "
 orch.on_recover([5])
 print(f"after recovery : alive={orch.n_alive}, "
       f"phi={orch.program.utilization:.0f}")
+
+print()
+print("=" * 64)
+print("Phase 4: switch/link fault domains + preplanned fast recovery")
+print("=" * 64)
+topo = fleet_tree(n_pods=2, racks_per_pod=2, chips_per_rack=4)
+orch = Orchestrator(topo, OrchestratorConfig(k=3, capacity=2))
+print(f"initial phi = {orch.program.utilization:.0f}, "
+      f"blue = {np.nonzero(orch.blue)[0].tolist()}")
+orch.preplan_switch_failures()      # one batched solve for all scenarios
+s = int(np.nonzero(orch.blue)[0][0])
+orch.on_switch_failure([s])         # aggregation plane dies, forwarding lives
+ev = orch.degraded_events[-1]
+print(f"switch {s} fails: degraded phi = {ev['degraded_utilization']:.0f} "
+      f"(instant, no solve) -> replanned phi = {ev['utilization']:.0f} "
+      f"({'cache hit' if ev['cache_hit'] else 'engine solve'})")
+orch.on_link_degrade({s: 0.5})      # its uplink also drops to half rate
+print(f"link {s} at half rate: phi = {orch.program.utilization:.0f}")
+orch.on_link_degrade({s: 1.0})
+orch.on_switch_recover([s])
+print(f"repaired: phi = {orch.program.utilization:.0f}, "
+      f"cache stats = {orch.preplan_cache_stats()}")
+
+if args.chaos:
+    print()
+    print("=" * 64)
+    print(f"Phase 5: seeded chaos — {args.chaos} mixed events, invariants "
+          f"checked after each (seed {args.seed})")
+    print("=" * 64)
+    cfg = OrchestratorConfig(k=3, capacity=2, straggler_quantile=0.5)
+    events = generate_scenario(topo, n_events=args.chaos, seed=args.seed,
+                               cfg=cfg)
+    orch = Orchestrator(topo, cfg)
+    orch.preplan_switch_failures()
+    report = ChaosHarness(orch, verify_cache_hits=True).run(events)
+    from collections import Counter
+    mix = ", ".join(f"{k}x{v}" for k, v in
+                    sorted(Counter(e.kind for e in events).items()))
+    print(f"events: {mix}")
+    print(f"{report.events} events in {report.seconds:.2f}s "
+          f"({report.events_per_sec:.0f} ev/s): {report.replans} engine "
+          f"solves, {report.cache_hits} preplan-cache hits, "
+          f"{report.invariant_checks} invariant checks, all passing")

@@ -1,11 +1,12 @@
 from .schedule import (CongestionPlan, ReduceProgram, TenantPlan,
                        build_program, plan, plan_batch, plan_congestion)
-from .topology import ClusterTopology, chip_level_tree, fail_devices, fleet_tree
+from .topology import (ClusterTopology, chip_level_tree, degrade_links,
+                       fail_devices, fail_switches, fleet_tree)
 from .tree_allreduce import tree_allreduce, tree_allreduce_tree
 
 __all__ = [
     "CongestionPlan", "ReduceProgram", "TenantPlan", "build_program",
     "plan", "plan_batch", "plan_congestion", "ClusterTopology",
-    "chip_level_tree", "fleet_tree", "fail_devices", "tree_allreduce",
-    "tree_allreduce_tree",
+    "chip_level_tree", "fleet_tree", "fail_devices", "fail_switches",
+    "degrade_links", "tree_allreduce", "tree_allreduce_tree",
 ]

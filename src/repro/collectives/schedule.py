@@ -46,6 +46,9 @@ class ReduceProgram:
 def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
     t = topo.tree
     load = topo.load
+    if topo.blocked is not None and np.any(np.asarray(blue, bool)
+                                           & topo.blocked):
+        raise ValueError("blue placement aggregates at a failed switch")
     if any(load[v] > 0 and len(t.children[v]) > 0 for v in range(t.n)):
         raise ValueError("executor supports leaf-only loads")
     n_dev = topo.n_devices
@@ -199,6 +202,9 @@ def plan_batch(topos: list[ClusterTopology], k: int,
     if len(avails) != len(topos):
         raise ValueError(f"{len(avails)} avail masks for {len(topos)} "
                          f"topologies — plan_batch pairs them positionally")
+    # fault-domain plumbing: switches with a failed aggregation plane
+    # (topo.blocked) leave the candidate set on every strategy path
+    avails = [tp.candidates(av) for tp, av in zip(topos, avails, strict=True)]
     if strategy == "soar":
         opts = resolve_options(options, engine_kw, "plan_batch")
         if not opts.color:
@@ -252,6 +258,12 @@ def plan_congestion(topo: ClusterTopology, k: int,
         raise ValueError("pass exactly one of loads / count")
     if loads is None:
         loads = [topo.load] * count
+    if topo.blocked is not None:
+        # blocked switches leave Lambda for every tenant
+        if avails is None or isinstance(avails, np.ndarray):
+            avails = topo.candidates(avails)
+        else:
+            avails = [topo.candidates(a) for a in avails]
     from ..engine import solve_congestion
     res = solve_congestion(topo.tree, loads, k, avail=avails, **driver_kw)
     plans = []

@@ -27,10 +27,27 @@ class ClusterTopology:
     tree: Tree
     device_leaf: np.ndarray        # device id -> leaf switch id
     load: np.ndarray               # per-switch load (grad shards entering)
+    blocked: np.ndarray | None = None  # switches whose aggregation plane is
+                                       # down (forwarding still works); they
+                                       # leave the candidate set Lambda
 
     @property
     def n_devices(self) -> int:
         return len(self.device_leaf)
+
+    def candidates(self, avail: np.ndarray | None = None) -> np.ndarray | None:
+        """Availability mask Lambda after removing blocked switches.
+
+        ``avail`` is an optional extra mask (e.g. the orchestrator's
+        residual-capacity snapshot); the result is its intersection with
+        the non-blocked switches, or ``None`` when neither constrains.
+        """
+        if self.blocked is None:
+            return avail
+        cand = ~self.blocked
+        if avail is None:
+            return cand
+        return np.asarray(avail, bool) & cand
 
 
 def fleet_tree(n_pods: int = 2, racks_per_pod: int = 4,
@@ -108,4 +125,81 @@ def fail_devices(topo: ClusterTopology, dead: list[int]) -> ClusterTopology:
             raise ValueError(f"device {d} is already failed")
         load[device_leaf[d]] -= 1
         device_leaf[d] = -1
-    return ClusterTopology(tree=topo.tree, device_leaf=device_leaf, load=load)
+    return ClusterTopology(tree=topo.tree, device_leaf=device_leaf, load=load,
+                           blocked=topo.blocked)
+
+
+def fail_switches(topo: ClusterTopology, dead: list[int],
+                  isolate: bool = False) -> ClusterTopology:
+    """A switch's aggregation plane fails (runtime fault-domain path).
+
+    Default semantics are the in-network-computing fault model (P4COM's
+    fallback transport): the switch keeps *forwarding* — the tree, its
+    loads and all paths are unchanged — but it can never aggregate again,
+    so it leaves the candidate set Lambda (``blocked`` mask; the planner
+    paths intersect it into ``avail``).
+
+    ``isolate=True`` models the switch dying outright: every device whose
+    leaf lies in a dead switch's subtree is disconnected, so the subtree's
+    load drains exactly like :func:`fail_devices` (the tree object stays —
+    SOAR simply never spends budget on zero-load subtrees) and the subtree
+    re-homes nothing upward.
+
+    Duplicate ids collapse to one failure; a switch already blocked in
+    ``topo`` raises — same validate-then-apply discipline as
+    :func:`fail_devices`.
+    """
+    t = topo.tree
+    blocked = (np.zeros(t.n, bool) if topo.blocked is None
+               else topo.blocked.copy())
+    dead = list(dict.fromkeys(int(s) for s in dead))   # dedupe, keep order
+    for s in dead:
+        if not 0 <= s < t.n:
+            raise ValueError(f"switch {s} out of range [0, {t.n})")
+        if blocked[s]:
+            raise ValueError(f"switch {s} is already failed")
+    for s in dead:
+        blocked[s] = True
+    load = topo.load
+    device_leaf = topo.device_leaf
+    if isolate:
+        # descendants of any dead switch (including the switch itself)
+        dead_sub = np.zeros(t.n, bool)
+        dead_sub[dead] = True
+        for v in t.topo:                       # root first: parent resolved
+            p = t.parent[v]
+            if p != DEST and dead_sub[p]:
+                dead_sub[v] = True
+        gone = [d for d, leaf in enumerate(device_leaf)
+                if leaf >= 0 and dead_sub[leaf]]
+        if gone:
+            interim = fail_devices(
+                dataclasses.replace(topo, blocked=None), gone)
+            load, device_leaf = interim.load, interim.device_leaf
+    return ClusterTopology(tree=t, device_leaf=device_leaf, load=load,
+                           blocked=blocked)
+
+
+def degrade_links(topo: ClusterTopology,
+                  rates: dict[int, float]) -> ClusterTopology:
+    """Scale the up-link rate of the given switches (runtime fault path).
+
+    ``rates[v]`` is the remaining *rate* fraction of edge ``(v, p(v))`` —
+    0.5 means the link runs at half its bandwidth, so the reciprocal rate
+    doubles (``rho[v] /= rates[v]``); values above 1 speed a link up
+    (recovery relative to an already-degraded topology). The tree is
+    rebuilt with the new rho — this is exactly the ``rho`` the placement
+    DP optimizes over, so replanning through the engine picks it up with
+    no special casing.
+    """
+    t = topo.tree
+    rho = t.rho.copy()
+    for v, f in rates.items():
+        v, f = int(v), float(f)
+        if not 0 <= v < t.n:
+            raise ValueError(f"switch {v} out of range [0, {t.n})")
+        if not np.isfinite(f) or f <= 0:
+            raise ValueError(f"rate fraction for switch {v} must be a "
+                             f"positive finite number, got {f}")
+        rho[v] = rho[v] / f
+    return dataclasses.replace(topo, tree=Tree(t.parent, rho))

@@ -1,6 +1,10 @@
 from .orchestrator import Orchestrator, OrchestratorConfig
 from .stragglers import StragglerPolicy, StragglerReport
-from .elastic import rescale
+from .elastic import fleet_dims, rescale, scaling_budget
+from .faults import (ChaosHarness, ChaosReport, FaultEvent,
+                     InvariantViolation, generate_scenario)
 
 __all__ = ["Orchestrator", "OrchestratorConfig", "StragglerPolicy",
-           "StragglerReport", "rescale"]
+           "StragglerReport", "fleet_dims", "rescale", "scaling_budget",
+           "ChaosHarness", "ChaosReport", "FaultEvent",
+           "InvariantViolation", "generate_scenario"]

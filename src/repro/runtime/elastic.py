@@ -15,11 +15,44 @@ import numpy as np
 from ..collectives.topology import ClusterTopology, fail_devices, fleet_tree
 
 
-def rescale(topo: ClusterTopology, n_pods: int, racks_per_pod: int,
-            chips_per_rack: int) -> ClusterTopology:
-    """Return a fresh fleet tree at the new size (grow or shrink)."""
-    return fleet_tree(n_pods=n_pods, racks_per_pod=racks_per_pod,
-                      chips_per_rack=chips_per_rack)
+def fleet_dims(topo: ClusterTopology) -> tuple[int, int, int]:
+    """Derive ``(n_pods, racks_per_pod, chips_per_rack)`` from a
+    fleet-shaped topology (root spine -> pods -> racks[-> chip leaves]).
+
+    Works for both :func:`~repro.collectives.topology.fleet_tree` and
+    :func:`~repro.collectives.topology.chip_level_tree` outputs; raises on
+    topologies that are not pod/rack regular.
+    """
+    t = topo.tree
+    pods = t.children[t.root]
+    if not pods:
+        raise ValueError("not a fleet-shaped topology: root has no pods")
+    n_pods = len(pods)
+    racks_per_pod = len(t.children[pods[0]])
+    if racks_per_pod == 0 or any(len(t.children[p]) != racks_per_pod
+                                 for p in pods):
+        raise ValueError("not a fleet-shaped topology: ragged pods")
+    n_racks = n_pods * racks_per_pod
+    if topo.n_devices == 0 or topo.n_devices % n_racks:
+        raise ValueError("not a fleet-shaped topology: ragged racks")
+    return n_pods, racks_per_pod, topo.n_devices // n_racks
+
+
+def rescale(topo: ClusterTopology, n_pods: int | None = None,
+            racks_per_pod: int | None = None,
+            chips_per_rack: int | None = None) -> ClusterTopology:
+    """Return a fresh fleet tree at the new size (grow or shrink).
+
+    Dimensions left as ``None`` keep the current topology's value
+    (derived via :func:`fleet_dims`), so ``rescale(topo, n_pods=4)``
+    changes only the pod count. Historically ``topo`` was silently
+    ignored and all three dimensions were required.
+    """
+    cur_pods, cur_racks, cur_chips = fleet_dims(topo)
+    return fleet_tree(
+        n_pods=cur_pods if n_pods is None else n_pods,
+        racks_per_pod=cur_racks if racks_per_pod is None else racks_per_pod,
+        chips_per_rack=cur_chips if chips_per_rack is None else chips_per_rack)
 
 
 def shrink_by_failure(topo: ClusterTopology, dead: list[int]) -> ClusterTopology:

@@ -1,0 +1,331 @@
+"""Deterministic chaos harness for the fault-tolerant orchestrator.
+
+Reliability claims about the recovery path are only as good as the event
+sequences they were tested under. This module makes those sequences
+*reproducible*: :func:`generate_scenario` derives a feasibility-checked
+event stream from a seed (device/switch/link faults, straggler storms,
+correlated rack failures, recoveries, optional multi-workload admissions),
+and :class:`ChaosHarness` steps an :class:`~repro.runtime.Orchestrator`
+through it, re-checking the system's safety invariants after *every*
+event:
+
+  * the blue budget is respected and no blue sits on a blocked switch;
+  * per-switch capacity residuals never go negative, and the claim
+    ledger balances (capacity handed out == blue claims live);
+  * the installed program's utilization equals ``phi`` recomputed from
+    the current topology and mask — the program is never stale;
+  * whenever a recovery was served from the preplan cache, a fresh
+    engine solve of the same scenario must reproduce the cached
+    placement bit-for-bit (the cache can be fast, never wrong);
+  * the fleet keeps a quorum of healthy devices.
+
+A violated invariant raises :class:`InvariantViolation` naming the event
+and the failed check, so a chaos run doubles as a regression bisection
+tool: replay the same seed, stop at the same event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..collectives.schedule import plan
+from ..core.reduce import phi
+from .orchestrator import Orchestrator, OrchestratorConfig
+
+KINDS = ("fail_device", "recover_device", "fail_switch", "recover_switch",
+         "degrade_link", "recover_link", "straggler_storm",
+         "recover_quarantined", "fail_rack", "admit_workloads")
+
+DEGRADE_FACTORS = (0.5, 0.25, 0.125)
+
+
+class InvariantViolation(AssertionError):
+    """A safety invariant failed after a chaos event."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected event. Only the fields its ``kind`` uses are set."""
+    kind: str
+    devices: tuple = ()       # fail/recover_device, storm slow set, rack
+    switches: tuple = ()      # fail/recover_switch, rack switch
+    rates: tuple = ()         # degrade/recover_link: ((switch, fraction),)
+    steps: int = 0            # straggler_storm: observed steps
+    slow: float = 8.0         # straggler_storm: slow-device duration
+    count: int = 0            # admit_workloads
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """What a chaos run did and what it cost."""
+    records: list             # per-event dicts (kind, util, cache_hit, ...)
+    events: int
+    replans: int              # engine solves the orchestrator performed
+    cache_hits: int           # recoveries served by the preplan cache
+    stale: int                # cache entries evicted for capacity drift
+    invariant_checks: int
+    seconds: float
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.events / self.seconds if self.seconds > 0 else 0.0
+
+
+def _storm_limit(n_alive: int, quantile: float) -> int:
+    """Max slow devices a storm may have while still guaranteeing the
+    deadline quantile stays at the fast-device level (linear-interpolation
+    quantile: index q*(H-1) must not reach the m slow order statistics)."""
+    return int(np.floor((n_alive - 1) * (1.0 - quantile)))
+
+
+def generate_scenario(topo, n_events: int = 50, seed: int = 0,
+                      cfg: OrchestratorConfig | None = None,
+                      admits: bool = False,
+                      min_healthy: int | None = None) -> list[FaultEvent]:
+    """Derive a deterministic, feasibility-checked event sequence.
+
+    Mirrors the orchestrator's health state (failed / quarantined devices,
+    blocked switches, degraded links) while sampling, so every emitted
+    event is valid when it arrives: no double-failures, the fleet never
+    drops below ``min_healthy`` live devices (default ``max(2, n/4)``), at
+    most half the switches are ever blocked, and straggler storms are
+    sized so the deadline math *guarantees* the slow devices get
+    quarantined (slow count <= ``(alive-1) * (1-quantile)``, exactly
+    ``patience`` observed steps). The same ``(topo, n_events, seed, cfg)``
+    always yields the same list.
+    """
+    cfg = cfg or OrchestratorConfig()
+    rng = np.random.default_rng(seed)
+    n_dev = topo.n_devices
+    n_sw = topo.tree.n
+    if min_healthy is None:
+        min_healthy = max(2, n_dev // 4)
+    racks: dict[int, list[int]] = {}
+    for dev, leaf in enumerate(topo.device_leaf):
+        racks.setdefault(int(leaf), []).append(dev)
+
+    failed: set[int] = set()
+    quarantined: set[int] = set()
+    blocked: set[int] = set()
+    degraded: dict[int, float] = {}
+
+    def healthy() -> list[int]:
+        return [d for d in range(n_dev)
+                if d not in failed and d not in quarantined]
+
+    events: list[FaultEvent] = []
+    while len(events) < n_events:
+        alive = healthy()
+        menu: list[tuple[str, float]] = []
+        if len(alive) - 1 >= min_healthy:
+            menu.append(("fail_device", 3.0))
+        if failed:
+            menu.append(("recover_device", 3.0))
+        if len(blocked) + 1 <= n_sw // 2:
+            menu.append(("fail_switch", 2.0))
+        if blocked:
+            menu.append(("recover_switch", 2.0))
+        menu.append(("degrade_link", 2.0))
+        if degraded:
+            menu.append(("recover_link", 2.0))
+        storm_cap = min(_storm_limit(len(alive), cfg.straggler_quantile),
+                        len(alive) - min_healthy)
+        if storm_cap >= 1:
+            menu.append(("straggler_storm", 1.0))
+        if quarantined:
+            menu.append(("recover_quarantined", 1.0))
+        rack_ok = [r for r, devs in racks.items()
+                   if r not in blocked
+                   and len(blocked) + 1 <= n_sw // 2
+                   and any(d in alive for d in devs)
+                   and len(alive) - sum(d in alive for d in devs)
+                   >= min_healthy]
+        if rack_ok:
+            menu.append(("fail_rack", 1.0))
+        if admits:
+            menu.append(("admit_workloads", 1.0))
+
+        kinds = [k for k, _ in menu]
+        w = np.asarray([w for _, w in menu])
+        kind = str(rng.choice(kinds, p=w / w.sum()))
+
+        if kind == "fail_device":
+            m = int(rng.integers(1, min(2, len(alive) - min_healthy) + 1))
+            devs = rng.choice(alive, size=m, replace=False)
+            failed.update(int(d) for d in devs)
+            events.append(FaultEvent("fail_device",
+                                     devices=tuple(sorted(int(d)
+                                                          for d in devs))))
+        elif kind == "recover_device":
+            m = int(rng.integers(1, min(2, len(failed)) + 1))
+            devs = rng.choice(sorted(failed), size=m, replace=False)
+            failed.difference_update(int(d) for d in devs)
+            events.append(FaultEvent("recover_device",
+                                     devices=tuple(sorted(int(d)
+                                                          for d in devs))))
+        elif kind == "fail_switch":
+            s = int(rng.choice([v for v in range(n_sw) if v not in blocked]))
+            blocked.add(s)
+            events.append(FaultEvent("fail_switch", switches=(s,)))
+        elif kind == "recover_switch":
+            s = int(rng.choice(sorted(blocked)))
+            blocked.discard(s)
+            events.append(FaultEvent("recover_switch", switches=(s,)))
+        elif kind == "degrade_link":
+            v = int(rng.integers(0, n_sw))
+            f = float(rng.choice(DEGRADE_FACTORS))
+            degraded[v] = f
+            events.append(FaultEvent("degrade_link", rates=((v, f),)))
+        elif kind == "recover_link":
+            v = int(rng.choice(sorted(degraded)))
+            del degraded[v]
+            events.append(FaultEvent("recover_link", rates=((v, 1.0),)))
+        elif kind == "straggler_storm":
+            m = int(rng.integers(1, storm_cap + 1))
+            devs = rng.choice(alive, size=m, replace=False)
+            quarantined.update(int(d) for d in devs)
+            events.append(FaultEvent(
+                "straggler_storm",
+                devices=tuple(sorted(int(d) for d in devs)),
+                steps=cfg.straggler_patience, slow=8.0))
+        elif kind == "recover_quarantined":
+            quarantined.clear()
+            events.append(FaultEvent("recover_quarantined"))
+        elif kind == "fail_rack":
+            r = int(rng.choice(rack_ok))
+            devs = tuple(sorted(d for d in racks[r] if d in alive))
+            failed.update(devs)
+            blocked.add(r)
+            events.append(FaultEvent("fail_rack", devices=devs,
+                                     switches=(r,)))
+        else:  # admit_workloads
+            events.append(FaultEvent("admit_workloads",
+                                     count=int(rng.integers(1, 3))))
+    return events
+
+
+class ChaosHarness:
+    """Steps an orchestrator through fault events, checking invariants.
+
+    ``verify_cache_hits=True`` (the default, and the expensive part) runs
+    a fresh engine solve after every cache-served recovery and requires
+    the placement to match the cached one bit-for-bit.
+    """
+
+    def __init__(self, orch: Orchestrator, verify_cache_hits: bool = True):
+        self.orch = orch
+        self.verify_cache_hits = verify_cache_hits
+        self.invariant_checks = 0
+        # the observable capacity ledger: whatever is unclaimed now plus
+        # this workload's own claim. Extra admissions are tracked as they
+        # happen so the balance stays checkable.
+        if orch._residual is not None:
+            self._capacity_total = int(orch._residual.sum()
+                                       + int(orch.blue.sum()))
+        else:
+            self._capacity_total = None
+        self._extra_claims = 0
+
+    # -- event dispatch -------------------------------------------------------
+    def step(self, ev: FaultEvent) -> dict:
+        """Apply one event, then re-check every invariant."""
+        o = self.orch
+        hits0 = o._preplan_stats["hits"]
+        if ev.kind == "fail_device":
+            o.on_failure(list(ev.devices))
+        elif ev.kind == "recover_device":
+            o.on_recover(list(ev.devices))
+        elif ev.kind == "fail_switch":
+            o.on_switch_failure(list(ev.switches))
+        elif ev.kind == "recover_switch":
+            o.on_switch_recover(list(ev.switches))
+        elif ev.kind in ("degrade_link", "recover_link"):
+            o.on_link_degrade(dict(ev.rates))
+        elif ev.kind == "straggler_storm":
+            durations = np.ones(o.topo0.n_devices)
+            durations[list(ev.devices)] = ev.slow
+            for _ in range(ev.steps):
+                o.on_step_durations(durations)
+        elif ev.kind == "recover_quarantined":
+            quarantined = np.nonzero(o.quarantined)[0].tolist()
+            if quarantined:                       # no-op if nothing is held
+                o.on_recover(quarantined)
+        elif ev.kind == "fail_rack":
+            # correlated fault domain: the rack's chips die with the
+            # rack switch's aggregation plane
+            o.on_failure(list(ev.devices))
+            o.on_switch_failure(list(ev.switches))
+        elif ev.kind == "admit_workloads":
+            before = int(o._residual.sum())
+            o.begin_workloads(ev.count)
+            self._extra_claims += before - int(o._residual.sum())
+        else:
+            raise ValueError(f"unknown event kind {ev.kind!r}")
+        cache_hit = o._preplan_stats["hits"] > hits0
+        self.check_invariants(cache_hit=cache_hit, event=ev)
+        return {
+            "kind": ev.kind,
+            "utilization": o.program.utilization,
+            "cache_hit": cache_hit,
+            "n_alive": o.n_alive,
+            "replans": o.replans,
+        }
+
+    # -- invariants -----------------------------------------------------------
+    def check_invariants(self, cache_hit: bool = False,
+                         event: FaultEvent | None = None) -> None:
+        o = self.orch
+        where = f" after {event.kind} {event!r}" if event else ""
+
+        def _require(ok: bool, msg: str) -> None:
+            if not ok:
+                raise InvariantViolation(msg + where)
+
+        _require(o.n_alive > 0, "no healthy devices left")
+        _require(int(o.blue.sum()) <= o.cfg.k,
+                 f"blue count {int(o.blue.sum())} exceeds budget {o.cfg.k}")
+        _require(not np.any(o.blue & o.switch_blocked),
+                 "blue placement on a blocked switch")
+        if o._residual is not None:
+            _require(bool((o._residual >= 0).all()),
+                     f"negative capacity residual "
+                     f"{o._residual.min()} at switch "
+                     f"{int(o._residual.argmin())}")
+            handed_out = self._capacity_total - int(o._residual.sum())
+            _require(handed_out == int(o.blue.sum()) + self._extra_claims,
+                     f"claim ledger imbalance: {handed_out} capacity "
+                     f"claimed vs {int(o.blue.sum())} blue + "
+                     f"{self._extra_claims} admitted")
+        fresh_util = phi(o.topo.tree, o.topo.load, o.blue)
+        _require(o.program.utilization == fresh_util,
+                 f"program utilization {o.program.utilization} != "
+                 f"phi of current placement {fresh_util}")
+        if cache_hit and self.verify_cache_hits:
+            blue, prog = plan(o.topo, o.cfg.k, avail=o._replan_avail(),
+                              strategy=o.cfg.strategy)
+            _require(bool(np.array_equal(blue, o.blue)),
+                     "cache-served placement differs from a fresh solve")
+            _require(prog.utilization == o.program.utilization,
+                     f"cache-served utilization {o.program.utilization} != "
+                     f"fresh solve {prog.utilization}")
+        self.invariant_checks += 1
+
+    # -- driver ---------------------------------------------------------------
+    def run(self, events: list[FaultEvent]) -> ChaosReport:
+        """Step through all events; returns the run's report."""
+        o = self.orch
+        replans0, hits0 = o.replans, o._preplan_stats["hits"]
+        t0 = time.perf_counter()
+        records = [self.step(ev) for ev in events]
+        dt = time.perf_counter() - t0
+        return ChaosReport(
+            records=records,
+            events=len(events),
+            replans=o.replans - replans0,
+            cache_hits=o._preplan_stats["hits"] - hits0,
+            stale=o._preplan_stats["stale"],
+            invariant_checks=self.invariant_checks,
+            seconds=dt,
+        )

@@ -1,16 +1,33 @@
 """Fault-tolerant orchestration: failures/stragglers -> SOAR re-placement.
 
 The orchestrator owns the cluster reduction tree, the current blue
-placement, and the compiled-in ReduceProgram. Every topology event (device
-failure, straggler quarantine, elastic rescale) triggers the same recovery
-path the paper's model makes cheap:
+placement, and the compiled-in ReduceProgram. Every topology event —
+device failure, *switch aggregation-plane failure*, *link-rate
+degradation*, straggler quarantine, elastic rescale — funnels into the
+same recovery path the paper's model makes cheap:
 
-    update tree/load -> SOAR re-sow (O(n h k^2), milliseconds at fleet
-    scale) -> rebuild the static reduction program -> resume.
+    update tree/load/Lambda -> SOAR re-sow (O(n h k^2), milliseconds at
+    fleet scale) -> rebuild the static reduction program -> resume.
 
-Recovery is *bounded*: the budget k and per-switch aggregation capacity
-(Sec. 5.2) are respected across re-placements, so a tenant can never grab
-more in-network resources by failing chips.
+Recovery is *bounded* and comes in two speeds:
+
+  * **degraded mode** (switch failures only): a dead blue switch reverts
+    to plain forwarding immediately — the program is rebuilt from the
+    surviving blue set with *no* solve, so the utilization regression is
+    bounded by that one switch's aggregation saving (never worse than the
+    all-red fallback);
+  * **preplanned recovery**: what-if placements from ``preplan_failures``
+    / ``preplan_switch_failures`` (and every placement the orchestrator
+    has already solved) live in a fingerprint-keyed cache. A recovery
+    whose post-event topology fingerprint is cached — and whose capacity
+    availability still matches the snapshot the entry was solved under —
+    is a table lookup, not an engine solve. Hit/miss/stale counters
+    surface through :meth:`Orchestrator.preplan_cache_stats`, next to
+    the engine's compile-cache telemetry.
+
+The budget k and per-switch aggregation capacity (Sec. 5.2) are respected
+across re-placements, so a tenant can never grab more in-network
+resources by failing chips or switches.
 """
 from __future__ import annotations
 
@@ -20,7 +37,8 @@ import numpy as np
 
 from ..collectives.schedule import (ReduceProgram, build_program, plan,
                                     plan_batch, plan_congestion)
-from ..collectives.topology import ClusterTopology, fail_devices
+from ..collectives.topology import (ClusterTopology, degrade_links,
+                                    fail_devices)
 from .stragglers import StragglerPolicy, StragglerReport
 
 
@@ -44,6 +62,8 @@ class Orchestrator:
         n = topo.tree.n
         self.alive = np.ones(topo.n_devices, bool)
         self.quarantined = np.zeros(topo.n_devices, bool)
+        self.switch_blocked = np.zeros(n, bool)   # dead aggregation planes
+        self._link_rate = np.ones(n)              # up-link rate fraction
         # residual aggregation capacity (None = unbounded)
         self._residual = (np.full(n, cfg.capacity, np.int64)
                           if cfg.capacity is not None else None)
@@ -51,11 +71,19 @@ class Orchestrator:
             topo.n_devices, quantile=cfg.straggler_quantile,
             slack=cfg.straggler_slack, patience=cfg.straggler_patience)
         self.replans = 0
+        self.cache_recoveries = 0     # recoveries served without a solve
         self.utilization_history: list[float] = []
+        self.degraded_events: list[dict] = []
         self.blue: np.ndarray | None = None
         self.program: ReduceProgram | None = None
         self.last_congestion = None   # CongestionResult of the most recent
                                       # congestion-aware admission
+        # preplan cache: topology fingerprint -> solved placement. Filled by
+        # preplan_failures / preplan_switch_failures and by every solve the
+        # orchestrator performs (revisited states are lookups).
+        self._preplan: dict = {}
+        self._preplan_stats = {"hits": 0, "misses": 0, "stale": 0}
+        self._topo_epoch = 0          # bumped on rescale: old entries die
         self._replace()
 
     # -- properties ----------------------------------------------------------
@@ -74,21 +102,110 @@ class Orchestrator:
             return None
         return self._residual > 0
 
+    def _replan_avail(self) -> np.ndarray | None:
+        """Capacity availability a replan sees: own claim released first."""
+        if self._residual is None:
+            return None
+        r = self._residual.copy()
+        if self.blue is not None:
+            r[self.blue] += 1
+        return r > 0
+
+    def _fingerprint(self, dead: tuple | None = None,
+                     blocked: tuple | None = None) -> tuple:
+        """Hashable key of everything the placement solve depends on:
+        dead devices, blocked switches, link rates, budget, strategy, and
+        the topology epoch (rescales invalidate everything)."""
+        if dead is None:
+            dead = tuple(
+                np.nonzero(~self.alive | self.quarantined)[0].tolist())
+        if blocked is None:
+            blocked = tuple(np.nonzero(self.switch_blocked)[0].tolist())
+        return (self._topo_epoch, dead, blocked, self._link_rate.tobytes(),
+                self.cfg.k, self.cfg.strategy)
+
+    def _preplan_store(self, fp: tuple, blue: np.ndarray, util: float,
+                       avail: np.ndarray | None) -> None:
+        self._preplan[fp] = {
+            "blue": np.array(blue, dtype=bool, copy=True),
+            "util": float(util),
+            # the capacity snapshot the solve ran under; compared at lookup
+            # time so a shifted capacity landscape invalidates the entry
+            "avail_key": None if avail is None
+            else np.asarray(avail, bool).tobytes(),
+        }
+
     def _replace(self) -> None:
-        """(Re)compute the SOAR placement + reduction program."""
+        """(Re)compute the SOAR placement + program with an engine solve."""
         if self._residual is not None and self.blue is not None:
             self._residual[self.blue] += 1  # release the old claim
+        avail = self._avail()
         self.blue, self.program = plan(
-            self.topo, self.cfg.k, avail=self._avail(),
-            strategy=self.cfg.strategy)
+            self.topo, self.cfg.k, avail=avail, strategy=self.cfg.strategy)
         if self._residual is not None:
             self._residual[self.blue] -= 1
         self.replans += 1
         self.utilization_history.append(self.program.utilization)
+        # memoize: landing in this exact topology state again (e.g. the
+        # mirror recovery of this event) becomes a table lookup
+        self._preplan_store(self._fingerprint(), self.blue,
+                            self.program.utilization, avail)
+
+    def _apply_cached(self, entry: dict) -> None:
+        """Install a preplanned placement: claim swap + program rebuild,
+        no engine solve."""
+        blue = entry["blue"].copy()
+        if self._residual is not None and self.blue is not None:
+            self._residual[self.blue] += 1
+        program = build_program(self.topo, blue)
+        if self._residual is not None:
+            self._residual[blue] -= 1
+        self.blue = blue
+        self.program = program
+        self.cache_recoveries += 1
+        self.utilization_history.append(program.utilization)
+
+    def _recover(self) -> bool:
+        """Cache-or-solve re-placement after a topology event.
+
+        Returns True when the preplan cache served the recovery (no
+        engine solve). A cached entry is *stale* — counted, evicted, and
+        solved around — when the capacity availability it was computed
+        under no longer matches what this replan would see (another
+        workload claimed or released switches in the meantime).
+        """
+        fp = self._fingerprint()
+        entry = self._preplan.get(fp)
+        if entry is not None:
+            avail = self._replan_avail()
+            key = None if avail is None else avail.tobytes()
+            if key == entry["avail_key"]:
+                self._preplan_stats["hits"] += 1
+                self._apply_cached(entry)
+                return True
+            self._preplan_stats["stale"] += 1
+            del self._preplan[fp]
+        else:
+            self._preplan_stats["misses"] += 1
+        self._replace()
+        return False
+
+    def _scenario_topo(self, dead: list[int]) -> ClusterTopology:
+        """Effective topology for a given dead-device set, with the current
+        link degradations and blocked switches applied."""
+        topo = fail_devices(self.topo0, list(dead))
+        if (self._link_rate != 1.0).any():
+            topo = degrade_links(
+                topo, {int(v): float(f)
+                       for v, f in enumerate(self._link_rate) if f != 1.0})
+        if self.switch_blocked.any():
+            topo = dataclasses.replace(topo,
+                                       blocked=self.switch_blocked.copy())
+        return topo
 
     def _effective_topo(self) -> ClusterTopology:
         dead = np.nonzero(~self.alive | self.quarantined)[0]
-        return fail_devices(self.topo0, list(dead))
+        return self._scenario_topo(list(dead))
 
     # -- event handlers -------------------------------------------------------
     def on_failure(self, devices: list[int]) -> ReduceProgram:
@@ -97,7 +214,9 @@ class Orchestrator:
         Validates every id before touching any state (and collapses
         duplicates), so a bad id mid-list cannot leave the orchestrator
         half-applied — same discipline as :meth:`on_recover` and
-        :func:`~repro.collectives.topology.fail_devices`.
+        :func:`~repro.collectives.topology.fail_devices`. Recovery goes
+        through the preplan cache (:meth:`preplan_failures`) before
+        falling back to an engine solve.
         """
         devices = list(dict.fromkeys(int(d) for d in devices))
         for d in devices:
@@ -113,17 +232,112 @@ class Orchestrator:
         for d in devices:
             self.alive[d] = False
         self.topo = self._effective_topo()
-        self._replace()
+        self._recover()
+        return self.program
+
+    def on_switch_failure(self, switches: list[int]) -> ReduceProgram:
+        """A switch's aggregation plane dies; forwarding survives.
+
+        Two-stage recovery (the in-network-computing fault model — P4COM
+        handles aggregator loss with a fallback transport the same way):
+
+        1. **degraded mode** — any failed switch that is currently blue
+           reverts to plain forwarding *immediately*: its capacity claim
+           is released and the program is rebuilt from the surviving blue
+           set with no engine solve. The utilization regression is
+           bounded — exactly the dead switches' aggregation saving, never
+           worse than all-red — and recorded in ``degraded_events``.
+        2. **replan** — cache-or-solve through the preplan cache
+           (:meth:`preplan_switch_failures` makes step 2 a table lookup
+           for every preplanned single-switch failure).
+        """
+        switches = list(dict.fromkeys(int(s) for s in switches))
+        n = self.topo0.tree.n
+        for s in switches:
+            if not 0 <= s < n:
+                raise ValueError(f"switch {s} out of range [0, {n})")
+            if self.switch_blocked[s]:
+                raise ValueError(f"switch {s} already failed")
+        for s in switches:
+            self.switch_blocked[s] = True
+        self.topo = self._effective_topo()
+        degraded_util = None
+        was_blue = [s for s in switches
+                    if self.blue is not None and self.blue[s]]
+        if was_blue:
+            deg_blue = self.blue.copy()
+            deg_blue[was_blue] = False
+            if self._residual is not None:
+                self._residual[was_blue] += 1   # dead blues release claims
+            self.program = build_program(self.topo, deg_blue)
+            self.blue = deg_blue
+            degraded_util = self.program.utilization
+        hit = self._recover()
+        self.degraded_events.append({
+            "switches": tuple(switches),
+            "was_blue": tuple(was_blue),
+            "degraded_utilization": degraded_util,
+            "utilization": self.program.utilization,
+            "cache_hit": hit,
+        })
+        return self.program
+
+    def on_switch_recover(self, switches: list[int]) -> ReduceProgram:
+        """A repaired aggregation plane rejoins the candidate set."""
+        switches = list(dict.fromkeys(int(s) for s in switches))
+        n = self.topo0.tree.n
+        for s in switches:
+            if not 0 <= s < n:
+                raise ValueError(f"switch {s} out of range [0, {n})")
+            if not self.switch_blocked[s]:
+                raise ValueError(f"switch {s} is not failed")
+        for s in switches:
+            self.switch_blocked[s] = False
+        self.topo = self._effective_topo()
+        self._recover()
+        return self.program
+
+    def on_link_degrade(self, rates: dict[int, float]) -> ReduceProgram:
+        """Up-link rate changes: re-solve with the updated rho.
+
+        ``rates[v]`` is the remaining rate fraction of switch ``v``'s
+        up-link relative to the *pristine* topology (0.5 = half rate,
+        1.0 = fully recovered) — the ``rho`` the placement DP optimizes
+        over changes, so recovery runs through the normal engine path
+        (cache-or-solve; restoring a previously-seen rate state is a
+        lookup).
+        """
+        n = self.topo0.tree.n
+        items = [(int(v), float(f)) for v, f in rates.items()]
+        for v, f in items:
+            if not 0 <= v < n:
+                raise ValueError(f"switch {v} out of range [0, {n})")
+            if not np.isfinite(f) or f <= 0:
+                raise ValueError(f"rate fraction for switch {v} must be a "
+                                 f"positive finite number, got {f}")
+        for v, f in items:
+            self._link_rate[v] = f
+        self.topo = self._effective_topo()
+        self._recover()
         return self.program
 
     def on_step_durations(self, durations: np.ndarray) -> StragglerReport:
-        """Feed per-device step durations; quarantine persistent stragglers."""
-        report = self.stragglers.observe(durations)
+        """Feed per-device step durations; quarantine persistent stragglers.
+
+        Dead and quarantined devices are masked out of the deadline
+        quantile (their EWMA entries are stale and would skew the cutoff)
+        and can never be suspects. Refuses to quarantine the last alive
+        devices — the same ``n_alive`` floor :meth:`on_failure` enforces,
+        but by skipping the quarantine rather than raising (step timings
+        are advisory telemetry, not an operator command).
+        """
+        alive = self.alive & ~self.quarantined
+        report = self.stragglers.observe(durations, alive=alive)
         newly = report.quarantined & ~self.quarantined & self.alive
-        if newly.any():
+        if newly.any() and int(newly.sum()) < self.n_alive:
             self.quarantined |= newly
             self.topo = self._effective_topo()
-            self._replace()
+            self._recover()
         return report
 
     def on_recover(self, devices: list[int]) -> ReduceProgram:
@@ -145,6 +359,48 @@ class Orchestrator:
             self.quarantined[d] = False
             self.stragglers.clear(d)
         self.topo = self._effective_topo()
+        self._recover()
+        return self.program
+
+    def on_rescale(self, n_pods: int | None = None,
+                   racks_per_pod: int | None = None,
+                   chips_per_rack: int | None = None,
+                   budget_policy: str = "proportional") -> ReduceProgram:
+        """Elastic rescale: drain -> rebuild the fleet -> re-sow the budget.
+
+        The fleet tree is rebuilt at the new dimensions (unspecified ones
+        keep their current value, see :func:`repro.runtime.elastic.
+        rescale`), the blue budget moves per
+        :func:`~repro.runtime.elastic.scaling_budget`, and this workload
+        is re-placed through the normal claim accounting. Rescaling
+        drains the fleet: other workloads' capacity claims are dropped
+        (re-admit them via :meth:`begin_workloads`), and device health,
+        straggler state and the preplan cache reset with the topology.
+        """
+        from .elastic import rescale, scaling_budget
+        old_devices = self.topo0.n_devices
+        new_topo = rescale(self.topo0, n_pods=n_pods,
+                           racks_per_pod=racks_per_pod,
+                           chips_per_rack=chips_per_rack)
+        self.cfg = dataclasses.replace(
+            self.cfg, k=scaling_budget(self.cfg.k, old_devices,
+                                       new_topo.n_devices, budget_policy))
+        n = new_topo.tree.n
+        self.topo0 = new_topo
+        self.topo = new_topo
+        self.alive = np.ones(new_topo.n_devices, bool)
+        self.quarantined = np.zeros(new_topo.n_devices, bool)
+        self.switch_blocked = np.zeros(n, bool)
+        self._link_rate = np.ones(n)
+        self._residual = (np.full(n, self.cfg.capacity, np.int64)
+                          if self.cfg.capacity is not None else None)
+        self.stragglers = StragglerPolicy(
+            new_topo.n_devices, quantile=self.cfg.straggler_quantile,
+            slack=self.cfg.straggler_slack,
+            patience=self.cfg.straggler_patience)
+        self.blue = None
+        self._topo_epoch += 1
+        self._preplan.clear()
         self._replace()
         return self.program
 
@@ -251,6 +507,13 @@ class Orchestrator:
             self.last_congestion = driver_res
         return progs
 
+    # -- telemetry ------------------------------------------------------------
+    def preplan_cache_stats(self) -> dict:
+        """Preplan-cache telemetry: lookup hits / misses / stale entries,
+        current entry count, and recoveries served without a solve."""
+        return {**self._preplan_stats, "entries": len(self._preplan),
+                "cache_recoveries": self.cache_recoveries}
+
     def engine_cache_stats(self) -> dict:
         """Placement-engine compile/packing cache telemetry.
 
@@ -258,11 +521,14 @@ class Orchestrator:
         leans on the engine's jit cache: the layout-bucketed Forest
         packing maps the orchestrator's recurring scenario shapes onto a
         handful of compiled executables. Surface the counters so
-        operators can verify steady-state serving isn't recompiling.
+        operators can verify steady-state serving isn't recompiling. The
+        ``preplan`` sub-dict reports the recovery preplan cache
+        (:meth:`preplan_cache_stats`) next to them.
         """
         from ..engine import cache_stats
-        return cache_stats()
+        return {**cache_stats(), "preplan": self.preplan_cache_stats()}
 
+    # -- what-if preplanning --------------------------------------------------
     def preplan_failures(
         self, failure_sets: list[list[int]]
     ) -> list[tuple[np.ndarray, float]]:
@@ -271,23 +537,68 @@ class Orchestrator:
         Builds the effective topology of every scenario and solves them
         all in one batched engine call (same tree shape -> one compiled
         executable; the device-resident solve returns just the masks and
-        costs). Returns ``[(blue, utilization)]`` per scenario; the
-        orchestrator can stash these to make real recovery a table lookup.
+        costs). Returns ``[(blue, utilization)]`` per scenario, and files
+        every result in the preplan cache so the matching *real* failure
+        recovers with a table lookup instead of a solve (entries go stale
+        — and fall back to solving — if the capacity landscape shifts
+        before the failure happens).
         """
-        topos = []
+        topos, fps = [], []
         for devices in failure_sets:
             dead = set(np.nonzero(~self.alive | self.quarantined)[0].tolist())
             dead.update(int(d) for d in devices)
-            topos.append(fail_devices(self.topo0, sorted(dead)))
+            dead = sorted(dead)
+            topos.append(self._scenario_topo(dead))
+            fps.append(self._fingerprint(dead=tuple(dead)))
         # a real failure replan releases this workload's own claim before
-        # re-placing (_replace); mirror that, or preplans would see fewer
-        # available switches than recovery actually has
-        if self._residual is not None and self.blue is not None:
-            residual = self._residual.copy()
-            residual[self.blue] += 1
-            avail = residual > 0
-        else:
-            avail = self._avail()
+        # re-placing; mirror that, or preplans would see fewer available
+        # switches than recovery actually has
+        avail = self._replan_avail()
         planned = plan_batch(topos, self.cfg.k, [avail] * len(topos),
                              strategy=self.cfg.strategy)
-        return [(blue, prog.utilization) for blue, prog in planned]
+        out = []
+        for fp, (blue, prog) in zip(fps, planned):
+            self._preplan_store(fp, blue, prog.utilization, avail)
+            out.append((blue, prog.utilization))
+        return out
+
+    def preplan_switch_failures(
+        self, switch_sets: list[list[int]] | None = None
+    ) -> list[tuple[np.ndarray, float]]:
+        """What-if analysis for aggregation-plane failures.
+
+        By default preplans every currently-available switch failing
+        alone — the single-switch scenarios that dominate real recovery
+        traffic — in one batched engine call; pass explicit ``switch_sets``
+        for correlated scenarios. Results are returned as
+        ``[(blue, utilization)]`` and filed in the preplan cache keyed by
+        the post-failure topology fingerprint, so
+        :meth:`on_switch_failure` recovers those scenarios without a
+        solve (staleness rules as in :meth:`preplan_failures`).
+        """
+        n = self.topo0.tree.n
+        if switch_sets is None:
+            switch_sets = [[int(s)]
+                           for s in np.nonzero(~self.switch_blocked)[0]]
+        dead_now = sorted(
+            np.nonzero(~self.alive | self.quarantined)[0].tolist())
+        base = self._scenario_topo(dead_now)
+        topos, fps = [], []
+        for switches in switch_sets:
+            blocked = self.switch_blocked.copy()
+            for s in switches:
+                s = int(s)
+                if not 0 <= s < n:
+                    raise ValueError(f"switch {s} out of range [0, {n})")
+                blocked[s] = True
+            topos.append(dataclasses.replace(base, blocked=blocked))
+            fps.append(self._fingerprint(
+                blocked=tuple(np.nonzero(blocked)[0].tolist())))
+        avail = self._replan_avail()
+        planned = plan_batch(topos, self.cfg.k, [avail] * len(topos),
+                             strategy=self.cfg.strategy)
+        out = []
+        for fp, (blue, prog) in zip(fps, planned):
+            self._preplan_store(fp, blue, prog.utilization, avail)
+            out.append((blue, prog.utilization))
+        return out

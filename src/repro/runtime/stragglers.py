@@ -47,20 +47,40 @@ class StragglerPolicy:
         self.ewma = ewma
         self._profile = np.zeros(n_devices)
         self._strikes = np.zeros(n_devices, np.int64)
-        self._seen = False
+        self._observed = np.zeros(n_devices, bool)
 
-    def observe(self, durations: np.ndarray) -> StragglerReport:
-        """Fold one step's per-device durations; return suspects/quarantine."""
+    def observe(self, durations: np.ndarray,
+                alive: np.ndarray | None = None) -> StragglerReport:
+        """Fold one step's per-device durations; return suspects/quarantine.
+
+        ``alive`` masks the devices that actually ran this step: dead or
+        quarantined devices keep their (stale) EWMA entries but are
+        excluded from the deadline quantile — otherwise a dead slow
+        device's frozen profile inflates the cutoff forever and live
+        stragglers sail under it — and can never be suspects.
+        """
         d = np.asarray(durations, dtype=np.float64)
         if d.shape != self._profile.shape:
             raise ValueError(f"expected {self._profile.shape}, got {d.shape}")
-        if self._seen:
-            self._profile = self.ewma * d + (1 - self.ewma) * self._profile
+        if alive is None:
+            alive = np.ones_like(self._profile, dtype=bool)
         else:
-            self._profile = d.copy()
-            self._seen = True
-        deadline = float(np.quantile(self._profile, self.quantile)) * self.slack
-        suspects = self._profile > deadline
+            alive = np.asarray(alive, dtype=bool)
+            if alive.shape != self._profile.shape:
+                raise ValueError(f"expected alive mask {self._profile.shape},"
+                                 f" got {alive.shape}")
+        first = alive & ~self._observed
+        folded = self.ewma * d + (1 - self.ewma) * self._profile
+        self._profile = np.where(first, d,
+                                 np.where(alive, folded, self._profile))
+        self._observed |= alive
+        if alive.any():
+            deadline = float(
+                np.quantile(self._profile[alive], self.quantile)) * self.slack
+            suspects = alive & (self._profile > deadline)
+        else:
+            deadline = float("inf")
+            suspects = np.zeros_like(alive)
         self._strikes = np.where(suspects, self._strikes + 1, 0)
         return StragglerReport(
             suspects=suspects,
@@ -71,4 +91,6 @@ class StragglerPolicy:
     def clear(self, device: int) -> None:
         """Forget history for a replaced/recovered device."""
         self._strikes[device] = 0
-        self._profile[device] = float(np.median(self._profile))
+        ref = self._profile[self._observed]
+        self._profile[device] = float(np.median(ref)) if len(ref) else 0.0
+        self._observed[device] = True

@@ -1,0 +1,307 @@
+"""Fault domains, degraded-mode aggregation, preplan cache, chaos harness."""
+import numpy as np
+import pytest
+
+from repro.collectives import (degrade_links, fail_devices, fail_switches,
+                               fleet_tree)
+from repro.collectives.schedule import build_program, plan
+from repro.core.reduce import all_red, phi
+from repro.core.soar import soar
+from repro.runtime import (ChaosHarness, FaultEvent, InvariantViolation,
+                           Orchestrator, OrchestratorConfig,
+                           generate_scenario)
+from repro.runtime.faults import _storm_limit
+from repro.testing import given, settings, st
+
+
+def mk(k=3, capacity=None, **kw):
+    topo = fleet_tree(n_pods=2, racks_per_pod=4, chips_per_rack=4)
+    return topo, Orchestrator(topo, OrchestratorConfig(k=k, capacity=capacity,
+                                                       **kw))
+
+
+# -- topology-level fault domains ---------------------------------------------
+
+def test_fail_switches_blocks_candidates():
+    topo = fleet_tree(2, 2, 4)
+    t2 = fail_switches(topo, [1, 4])
+    assert t2.blocked[1] and t2.blocked[4] and t2.blocked.sum() == 2
+    # tree and loads untouched: the switch still forwards
+    assert np.array_equal(t2.load, topo.load)
+    assert np.array_equal(t2.tree.rho, topo.tree.rho)
+    cand = t2.candidates()
+    assert not cand[1] and not cand[4] and cand.sum() == t2.tree.n - 2
+    # intersection with an extra avail mask
+    extra = np.ones(t2.tree.n, bool)
+    extra[2] = False
+    both = t2.candidates(extra)
+    assert not both[1] and not both[2] and not both[4]
+    with pytest.raises(ValueError):
+        fail_switches(t2, [1])                # already failed
+    with pytest.raises(ValueError):
+        fail_switches(topo, [topo.tree.n])    # out of range
+
+
+def test_fail_switches_isolate_drains_subtree():
+    topo = fleet_tree(2, 2, 4)
+    pod = 1                                    # first pod switch
+    t2 = fail_switches(topo, [pod], isolate=True)
+    # every device under the pod is disconnected -> its load drained
+    sub = [v for v in range(topo.tree.n)
+           if v == pod or topo.tree.parent[v] == pod]
+    assert all(t2.load[v] == 0 for v in sub)
+    gone = [d for d, leaf in enumerate(topo.device_leaf)
+            if topo.tree.parent[leaf] == pod]
+    assert all(t2.device_leaf[d] == -1 for d in gone)
+    assert t2.load.sum() == topo.load.sum() - len(gone)
+    assert t2.blocked[pod]
+
+
+def test_degrade_links_scales_rho():
+    topo = fleet_tree(2, 2, 4)
+    t2 = degrade_links(topo, {3: 0.5, 4: 0.25})
+    assert t2.tree.rho[3] == pytest.approx(topo.tree.rho[3] * 2)
+    assert t2.tree.rho[4] == pytest.approx(topo.tree.rho[4] * 4)
+    untouched = [v for v in range(topo.tree.n) if v not in (3, 4)]
+    assert np.array_equal(t2.tree.rho[untouched], topo.tree.rho[untouched])
+    for bad in ({-1: 0.5}, {topo.tree.n: 0.5}, {0: 0.0}, {0: -1.0},
+                {0: float("nan")}):
+        with pytest.raises(ValueError):
+            degrade_links(topo, bad)
+
+
+def test_fail_devices_preserves_blocked():
+    topo = fail_switches(fleet_tree(2, 2, 4), [2])
+    t2 = fail_devices(topo, [0, 1])
+    assert t2.blocked is not None and t2.blocked[2]
+
+
+def test_build_program_rejects_blue_on_blocked():
+    topo = fail_switches(fleet_tree(2, 2, 4), [1])
+    blue = np.zeros(topo.tree.n, bool)
+    blue[1] = True
+    with pytest.raises(ValueError, match="failed switch"):
+        build_program(topo, blue)
+
+
+def test_plan_respects_blocked_switches():
+    topo = fleet_tree(2, 2, 4)
+    blue0, _ = plan(topo, 3)
+    hit = int(np.nonzero(blue0)[0][0])
+    blue, prog = plan(fail_switches(topo, [hit]), 3)
+    assert not blue[hit]
+    # matches the serial solver under the same candidate mask
+    avail = np.ones(topo.tree.n, bool)
+    avail[hit] = False
+    assert prog.utilization == pytest.approx(
+        soar(topo.tree, topo.load, 3, avail=avail).cost)
+
+
+# -- orchestrator: switch failures, degraded mode, preplan cache --------------
+
+def test_switch_failure_degraded_then_replan():
+    topo, orch = mk(k=3)
+    u0 = orch.program.utilization
+    hit = int(np.nonzero(orch.blue)[0][0])
+    orch.on_switch_failure([hit])
+    ev = orch.degraded_events[-1]
+    assert ev["switches"] == (hit,) and ev["was_blue"] == (hit,)
+    # degraded mode: losing one aggregator regresses utilization, but is
+    # bounded by all-red, and the replanned placement recovers some of it
+    assert u0 < ev["degraded_utilization"]
+    assert ev["degraded_utilization"] <= phi(
+        orch.topo.tree, orch.topo.load,
+        np.zeros(orch.topo.tree.n, bool))
+    assert ev["utilization"] <= ev["degraded_utilization"]
+    assert not orch.blue[hit]
+    # failing a non-blue switch has no degraded-mode step
+    cold = int(np.nonzero(~orch.blue & ~orch.switch_blocked)[0][0])
+    orch.on_switch_failure([cold])
+    assert orch.degraded_events[-1]["degraded_utilization"] is None
+    # validation: double-fail and range
+    with pytest.raises(ValueError):
+        orch.on_switch_failure([hit])
+    with pytest.raises(ValueError):
+        orch.on_switch_failure([orch.topo0.tree.n])
+    # recovery restores the original utilization
+    orch.on_switch_recover([hit, cold])
+    assert orch.program.utilization == pytest.approx(u0)
+    with pytest.raises(ValueError):
+        orch.on_switch_recover([hit])          # not failed any more
+
+
+def test_preplan_switch_failures_cache_hit_bit_identical():
+    """The ISSUE's regression: a preplan-cache hit must return a placement
+    bit-identical to what a fresh engine solve of the scenario produces."""
+    topo, orch = mk(k=3, capacity=2)
+    planned = orch.preplan_switch_failures()
+    n_open = int((~orch.switch_blocked).sum())
+    assert len(planned) == n_open
+    replans0 = orch.replans
+    for s in np.nonzero(~orch.switch_blocked)[0][:4]:
+        s = int(s)
+        orch.on_switch_failure([s])
+        assert orch.degraded_events[-1]["cache_hit"]
+        fresh_blue, fresh_prog = plan(orch.topo, orch.cfg.k,
+                                      avail=orch._replan_avail(),
+                                      strategy=orch.cfg.strategy)
+        assert np.array_equal(orch.blue, fresh_blue)
+        assert orch.program.utilization == fresh_prog.utilization
+        orch.on_switch_recover([s])            # back to a memoized state
+    assert orch.replans == replans0            # zero engine solves in loop
+    stats = orch.preplan_cache_stats()
+    assert stats["hits"] == 8 and stats["cache_recoveries"] == 8
+
+
+def test_preplan_cache_staleness_evicts():
+    """Entries solved under a different capacity landscape are stale: they
+    must be evicted and recovered around with a fresh solve, not served."""
+    topo, orch = mk(k=3, capacity=1)
+    orch.preplan_switch_failures([[0]])
+    orch.begin_workload()                      # capacity landscape shifts
+    orch.on_switch_failure([0])
+    stats = orch.preplan_cache_stats()
+    assert stats["stale"] == 1 and stats["hits"] == 0
+    assert not orch.degraded_events[-1]["cache_hit"]
+    # the fresh solve respected the shifted capacity
+    assert (orch._residual >= 0).all()
+
+
+def test_device_failure_recovery_is_cached():
+    topo, orch = mk(k=3)
+    orch.preplan_failures([[0], [1]])
+    replans0 = orch.replans
+    orch.on_failure([0])                       # preplanned -> hit
+    orch.on_recover([0])                       # initial state memoized -> hit
+    assert orch.replans == replans0
+    assert orch.preplan_cache_stats()["hits"] == 2
+    orch.on_failure([5])                       # never preplanned -> miss
+    assert orch.replans == replans0 + 1
+
+
+def test_link_degrade_replans_with_updated_rho():
+    topo, orch = mk(k=3)
+    u0 = orch.program.utilization
+    spine_kids = [v for v in range(topo.tree.n) if topo.tree.parent[v] == 0]
+    v = spine_kids[0]
+    orch.on_link_degrade({v: 0.5})             # pod uplink at half rate
+    degraded = degrade_links(topo, {v: 0.5})
+    assert orch.program.utilization == pytest.approx(
+        soar(degraded.tree, degraded.load, 3).cost)
+    assert orch.program.utilization >= u0
+    with pytest.raises(ValueError):
+        orch.on_link_degrade({v: 0.0})
+    # restoring the rate lands back on the memoized initial placement
+    replans0 = orch.replans
+    orch.on_link_degrade({v: 1.0})
+    assert orch.program.utilization == pytest.approx(u0)
+    assert orch.replans == replans0
+
+
+def test_engine_cache_stats_includes_preplan():
+    topo, orch = mk(k=2)
+    stats = orch.engine_cache_stats()
+    assert "preplan" in stats
+    assert stats["preplan"] == orch.preplan_cache_stats()
+    assert {"hits", "misses", "stale", "entries",
+            "cache_recoveries"} <= set(stats["preplan"])
+
+
+# -- chaos harness ------------------------------------------------------------
+
+def test_generate_scenario_deterministic_and_feasible():
+    topo = fleet_tree(2, 2, 4)
+    cfg = OrchestratorConfig(k=3, straggler_quantile=0.5)
+    a = generate_scenario(topo, n_events=40, seed=11, cfg=cfg)
+    b = generate_scenario(topo, n_events=40, seed=11, cfg=cfg)
+    assert a == b and len(a) == 40
+    c = generate_scenario(topo, n_events=40, seed=12, cfg=cfg)
+    assert a != c                              # seed actually matters
+    # mirror feasibility: replay the bookkeeping and check bounds
+    failed, quarantined, blocked = set(), set(), set()
+    min_healthy = max(2, topo.n_devices // 4)
+    for ev in a:
+        if ev.kind == "fail_device":
+            assert not (set(ev.devices) & (failed | quarantined))
+            failed |= set(ev.devices)
+        elif ev.kind == "recover_device":
+            assert set(ev.devices) <= failed
+            failed -= set(ev.devices)
+        elif ev.kind == "fail_switch":
+            assert not (set(ev.switches) & blocked)
+            blocked |= set(ev.switches)
+        elif ev.kind == "recover_switch":
+            assert set(ev.switches) <= blocked
+            blocked -= set(ev.switches)
+        elif ev.kind == "straggler_storm":
+            alive = topo.n_devices - len(failed) - len(quarantined)
+            assert 1 <= len(ev.devices) <= _storm_limit(
+                alive, cfg.straggler_quantile)
+            assert ev.steps == cfg.straggler_patience
+            quarantined |= set(ev.devices)
+        elif ev.kind == "recover_quarantined":
+            quarantined = set()
+        elif ev.kind == "fail_rack":
+            assert not (set(ev.switches) & blocked)
+            failed |= set(ev.devices)
+            blocked |= set(ev.switches)
+        assert topo.n_devices - len(failed) - len(quarantined) >= min_healthy
+        assert len(blocked) <= topo.tree.n // 2
+
+
+def test_storm_quarantines_exactly_the_slow_set():
+    topo, orch = mk(k=3)                       # 32 devices, q=0.9 -> cap 3
+    ev = FaultEvent("straggler_storm", devices=(4, 9, 17),
+                    steps=orch.cfg.straggler_patience, slow=8.0)
+    ChaosHarness(orch).step(ev)
+    assert set(np.nonzero(orch.quarantined)[0]) == {4, 9, 17}
+    assert orch.n_alive == topo.n_devices - 3
+    # recover_quarantined drains them; a second one is a clean no-op
+    h = ChaosHarness(orch)
+    h.step(FaultEvent("recover_quarantined"))
+    assert orch.n_alive == topo.n_devices
+    h.step(FaultEvent("recover_quarantined"))
+
+
+def test_chaos_harness_detects_violations():
+    topo, orch = mk(k=3)
+    h = ChaosHarness(orch)
+    h.check_invariants()                       # healthy state passes
+    orch.program = build_program(
+        orch.topo, np.zeros(orch.topo.tree.n, bool))   # stale program
+    with pytest.raises(InvariantViolation, match="utilization"):
+        h.check_invariants()
+
+
+def test_chaos_scenario_50_events_all_invariants():
+    """The acceptance scenario: >= 50 mixed seeded events, every invariant
+    checked after each one, cache-served recoveries verified against fresh
+    solves (the harness raises InvariantViolation otherwise)."""
+    topo = fleet_tree(2, 2, 4)
+    cfg = OrchestratorConfig(k=3, capacity=2, straggler_quantile=0.5)
+    events = generate_scenario(topo, n_events=50, seed=7, cfg=cfg)
+    kinds = {e.kind for e in events}
+    assert len(kinds) >= 5                     # genuinely mixed
+    orch = Orchestrator(topo, cfg)
+    orch.preplan_switch_failures()
+    report = ChaosHarness(orch, verify_cache_hits=True).run(events)
+    assert report.events == 50
+    assert report.invariant_checks == 50
+    assert report.cache_hits + report.replans >= 50 - sum(
+        e.kind == "recover_quarantined" for e in events)
+    assert (orch._residual >= 0).all()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_chaos_invariants_hold_for_random_seeds(seed):
+    """Property: any feasible event sequence keeps every invariant. The
+    harness raises InvariantViolation on the first violated check."""
+    topo = fleet_tree(2, 2, 2)
+    cfg = OrchestratorConfig(k=2, capacity=2, straggler_quantile=0.5,
+                             straggler_patience=2)
+    events = generate_scenario(topo, n_events=12, seed=seed, cfg=cfg,
+                               admits=True)
+    orch = Orchestrator(topo, cfg)
+    report = ChaosHarness(orch, verify_cache_hits=True).run(events)
+    assert report.invariant_checks == 12

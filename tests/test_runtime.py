@@ -257,3 +257,94 @@ def test_begin_workloads_zero_count_returns_empty():
     assert orch.begin_workloads(0) == []
     assert orch.begin_workloads(0, congestion_aware=True) == []
     assert len(orch.utilization_history) == 1     # only the init plan
+
+
+def test_straggler_quantile_masks_dead_devices():
+    """The deadline quantile must run over *alive* devices only: a dead
+    slow device's frozen EWMA used to inflate the cutoff forever, letting
+    live stragglers sail under it."""
+    pol = StragglerPolicy(8, quantile=0.6, slack=1.5, patience=1)
+    alive = np.ones(8, bool)
+    warm = np.ones(8)
+    warm[5:] = 50.0                        # three persistently slow devices
+    pol.observe(warm, alive=alive)
+    alive[5:] = False                      # ... then they die
+    later = np.ones(8)
+    later[0] = 4.0                         # a live straggler appears
+    rep = pol.observe(later, alive=alive)
+    # with the dead profiles masked, the quantile sits at the fast level
+    # and the live straggler is over the deadline
+    assert rep.deadline < 4.0
+    assert rep.suspects[0]
+    assert not rep.suspects[5:].any()      # dead devices never suspects
+    # unmasked observe (the old behavior) misses it: cutoff is inflated
+    pol2 = StragglerPolicy(8, quantile=0.6, slack=1.5, patience=1)
+    pol2.observe(warm)
+    assert not pol2.observe(later).suspects[0]
+
+
+def test_straggler_observe_empty_alive_is_noop():
+    pol = StragglerPolicy(4, patience=1)
+    rep = pol.observe(np.ones(4), alive=np.zeros(4, bool))
+    assert not rep.suspects.any() and np.isinf(rep.deadline)
+
+
+def test_on_step_durations_never_quarantines_last_devices():
+    """on_failure refuses to kill the last alive device; on_step_durations
+    must hold the same floor — by skipping the quarantine (telemetry is
+    advisory), not by raising mid-training-step."""
+    topo, orch = mk(k=2, straggler_patience=1)
+
+    class _CondemnAll:
+        def observe(self, durations, alive=None):
+            from repro.runtime import StragglerReport
+            return StragglerReport(suspects=alive.copy(),
+                                   quarantined=alive.copy(), deadline=0.0)
+
+    orch.stragglers = _CondemnAll()
+    replans0 = orch.replans
+    orch.on_step_durations(np.ones(topo.n_devices))
+    assert orch.n_alive == topo.n_devices  # nothing quarantined
+    assert orch.replans == replans0        # and no spurious replan
+
+
+def test_rescale_derives_dims_from_topology():
+    """rescale(topo, ...) used to ignore `topo` entirely and require all
+    three dimensions; unspecified ones now come from the topology."""
+    from repro.runtime import fleet_dims
+    topo = fleet_tree(2, 4, 4)
+    assert fleet_dims(topo) == (2, 4, 4)
+    grown = rescale(topo, n_pods=3)
+    assert fleet_dims(grown) == (3, 4, 4)
+    assert grown.n_devices == 48
+    fatter = rescale(topo, chips_per_rack=8)
+    assert fleet_dims(fatter) == (2, 4, 8)
+    assert rescale(topo, 4, 4, 4).n_devices == 64   # legacy spelling
+    # ragged pods (one pod has a rack, the other none) are rejected
+    from repro.collectives import ClusterTopology
+    from repro.core.tree import DEST, Tree
+    ragged = Tree(np.array([DEST, 0, 0, 1]), np.ones(4))
+    bad = ClusterTopology(tree=ragged, device_leaf=np.array([3, 3]),
+                          load=np.array([0, 0, 0, 2]))
+    with pytest.raises(ValueError):
+        fleet_dims(bad)
+
+
+def test_on_rescale_replans_with_scaled_budget():
+    topo, orch = mk(k=4, capacity=2)
+    orch.on_failure([0])
+    orch.begin_workload()                  # another tenant claims capacity
+    prog = orch.on_rescale(n_pods=4)       # 2 -> 4 pods: fleet doubles
+    assert orch.topo.n_devices == 64
+    assert orch.cfg.k == 8                 # proportional budget
+    assert orch.blue.sum() <= 8
+    assert orch.n_alive == 64              # health state reset with fleet
+    # drain semantics: only this workload's claim is live again
+    total = orch._residual.sum() + orch.blue.sum()
+    assert total == 2 * orch.topo.tree.n
+    assert prog.utilization == pytest.approx(
+        phi(orch.topo.tree, orch.topo.load, orch.blue))
+    # fixed policy keeps k
+    _, orch2 = mk(k=4, capacity=None)
+    orch2.on_rescale(n_pods=4, budget_policy="fixed")
+    assert orch2.cfg.k == 4
