@@ -1,0 +1,183 @@
+"""Fleet-coupled placement vs independent per-tree solves.
+
+The multi-tree setting: two aggregation trees hang off one shared core
+spine, and every tenant's root-crossing messages transit it — the link
+where tenants on *different* trees contend. We place each scenario's
+tenants (split evenly across the trees) two ways:
+
+  * independent — one ``solve_congestion`` per tree, the pre-fleet
+    serving pattern: each tree's tenants are congestion-balanced on
+    their own tree, but the solve is blind to the shared core;
+  * coupled     — one ``solve_fleet`` over the whole fleet: the penalty
+    loop profiles the union of tree-local and shared-core links, and
+    the DP sees the core transit cost on every root-crossing message,
+    so tenants aggregate root-side to shed core traffic.
+
+Both placements are measured with ``measure_fleet_multi`` on the fleet's
+global link-id space (tree segments first, core links last), so the
+shared-core comparison is apples to apples. Emits ``BENCH_fleet.json``
+plus a CSV; at every scenario with T >= ASSERT_MIN_T total tenants,
+asserts the coupled solve cuts the shared-core max-link congestion by at
+least ``MIN_CORE_REDUCTION`` (15%) vs the independent solves — the
+acceptance bar for the fleet work — and that an N=1 fleet solve stays
+bit-identical to ``solve_congestion`` (the degeneracy contract).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.collectives import build_fleet
+from repro.core.congestion import measure_fleet_multi
+from repro.core.tree import sample_load
+from repro.engine import solve_congestion, solve_fleet
+
+from .common import fmt_table, out_path, write_csv
+
+N_TREES = 2
+N_PODS = 2
+RACKS = 4
+CHIPS = 4
+SPINE_RHO = 64.0          # shared core is the expensive hop (DCN spine)
+K = 4
+T = 16                    # total tenants, split evenly across the trees
+MAX_ROUNDS = 8
+REPS = 2
+MIN_CORE_REDUCTION = 0.15  # acceptance: >= 15% lower shared-core max link
+ASSERT_MIN_T = 8           # ... asserted from the CI smoke scenario up
+
+
+def _check_n1_degeneracy(fleet, k: int, max_rounds: int) -> None:
+    """A 1-tree fleet must be solve_congestion, bit for bit."""
+    tree = fleet.topos[0].tree
+    loads = [sample_load(tree, "power-law", seed=900 + s) for s in range(4)]
+    single = solve_congestion(tree, loads, k, max_rounds=max_rounds,
+                              record_rounds=True)
+    one = solve_fleet([tree], loads, [0] * 4, k, max_rounds=max_rounds,
+                      record_rounds=True)
+    assert one.history == single.history, "N=1 fleet history diverged"
+    assert np.array_equal(one.blue, single.blue), "N=1 fleet masks diverged"
+    assert np.array_equal(one.congestion, single.congestion)
+    for (oe, ob), (se, sb) in zip(one.rounds_log, single.rounds_log,
+                                  strict=True):
+        assert np.array_equal(oe, se) and np.array_equal(ob, sb), \
+            "N=1 fleet round log diverged"
+
+
+def run(tenants=(T,), k: int = K, n_pods: int = N_PODS, racks: int = RACKS,
+        chips: int = CHIPS, spine_rho: float = SPINE_RHO,
+        max_rounds: int = MAX_ROUNDS, reps: int = REPS,
+        quiet: bool = False):
+    fleet = build_fleet(N_TREES, n_pods, racks, chips, spine_rho=spine_rho)
+    trees = [tp.tree for tp in fleet.topos]
+    _check_n1_degeneracy(fleet, min(k, 2), min(max_rounds, 3))
+    rows = []
+    bench: list[dict] = []
+    for T_i in tenants:
+        per_tree = max(1, T_i // N_TREES)
+        T_i = per_tree * N_TREES
+        tree_of = [g for g in range(N_TREES) for _ in range(per_tree)]
+        loads = [sample_load(trees[g], "power-law", seed=17 * t + g)
+                 for t, g in enumerate(tree_of)]
+
+        # warm both solve shapes before timing (jit compile out of band)
+        solve_fleet(trees, loads, tree_of, k, core_rho=fleet.core_rho,
+                    core_path=fleet.core_path, max_rounds=max_rounds)
+        for g in range(N_TREES):
+            rows_g = [t for t in range(T_i) if tree_of[t] == g]
+            solve_congestion(trees[g], [loads[t] for t in rows_g], k,
+                             max_rounds=max_rounds)
+
+        t_cpl, res = np.inf, None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = solve_fleet(trees, loads, tree_of, k,
+                            core_rho=fleet.core_rho,
+                            core_path=fleet.core_path,
+                            max_rounds=max_rounds)
+            t_cpl = min(t_cpl, time.perf_counter() - t0)
+            res = r
+        t_ind, indep_blues = np.inf, None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            blues = []
+            for g in range(N_TREES):
+                rows_g = [t for t in range(T_i) if tree_of[t] == g]
+                rg = solve_congestion(trees[g],
+                                      [loads[t] for t in rows_g], k,
+                                      max_rounds=max_rounds)
+                blues.extend(np.asarray(rg.blue[i])
+                             for i in range(len(rows_g)))
+            t_ind = min(t_ind, time.perf_counter() - t0)
+            indep_blues = blues
+
+        kw = dict(core_rho=fleet.core_rho, core_path=fleet.core_path)
+        n0 = trees[0].n
+        cpl_blues = [np.asarray(res.blue[t, : trees[g].n])
+                     for t, g in enumerate(tree_of)]
+        m_cpl = measure_fleet_multi(trees, tree_of, loads, cpl_blues, **kw)
+        m_ind = measure_fleet_multi(trees, tree_of, loads, indep_blues, **kw)
+        core_cpl = float(m_cpl.core_congestion.max())
+        core_ind = float(m_ind.core_congestion.max())
+        core_reduction = 1.0 - core_cpl / max(core_ind, 1e-12)
+        row = dict(
+            T=T_i,
+            per_tree=per_tree,
+            k=k,
+            spine_rho=spine_rho,
+            core_indep=core_ind,
+            core_coupled=core_cpl,
+            core_reduction=core_reduction,
+            global_max_indep=m_ind.max_congestion,
+            global_max_coupled=m_cpl.max_congestion,
+            rounds=res.rounds,
+            best_round=res.best_round,
+            solve_s_coupled=t_cpl,
+            solve_s_indep=t_ind,
+        )
+        bench.append(row)
+        rows.append(list(row.values()))
+        if T_i >= ASSERT_MIN_T:
+            assert core_reduction >= MIN_CORE_REDUCTION, (
+                f"fleet-coupled solve cut shared-core max congestion by "
+                f"only {100 * core_reduction:.1f}% at T={T_i} — below the "
+                f"{100 * MIN_CORE_REDUCTION:.0f}% bar "
+                f"(core {core_ind:.1f} -> {core_cpl:.1f})")
+    header = list(bench[0].keys())
+    write_csv("fleet.csv", header, rows)
+    with open(out_path("BENCH_fleet.json"), "w") as fh:
+        json.dump({"n_trees": N_TREES, "n_pods": n_pods, "racks": racks,
+                   "chips": chips, "k": k, "spine_rho": spine_rho,
+                   "max_rounds": max_rounds,
+                   "min_core_reduction": MIN_CORE_REDUCTION, "rows": bench},
+                  fh, indent=2)
+    if not quiet:
+        print(fmt_table(header, rows, max_rows=len(rows)))
+    return header, rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--tenants", type=str, default=str(T),
+                    help="comma-separated total tenant counts, split "
+                         "evenly across the 2 trees (the >=15%% "
+                         "shared-core reduction asserts from T >= "
+                         f"{ASSERT_MIN_T} up)")
+    ap.add_argument("--k", type=int, default=K)
+    ap.add_argument("--pods", type=int, default=N_PODS)
+    ap.add_argument("--racks", type=int, default=RACKS)
+    ap.add_argument("--chips", type=int, default=CHIPS)
+    ap.add_argument("--spine-rho", type=float, default=SPINE_RHO)
+    ap.add_argument("--rounds", type=int, default=MAX_ROUNDS)
+    ap.add_argument("--reps", type=int, default=REPS)
+    args = ap.parse_args(argv)
+    run(tenants=tuple(int(x) for x in args.tenants.split(",")),
+        k=args.k, n_pods=args.pods, racks=args.racks, chips=args.chips,
+        spine_rho=args.spine_rho, max_rounds=args.rounds, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

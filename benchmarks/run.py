@@ -14,7 +14,7 @@ import time
 from . import (beyond_bottleneck, beyond_budget, congestion,
                engine_throughput, fig6_strategies, fig7_online,
                fig8_usecases, fig9_runtime, fig10_scaling, fig11_scalefree,
-               paper_claims, recovery)
+               fleet, paper_claims, recovery)
 
 BENCHES = [
     ("paper_claims (Figs 1-3 + brute-force optimality)", paper_claims.run, {}),
@@ -28,6 +28,8 @@ BENCHES = [
      engine_throughput.run, {}),
     ("congestion (driver vs utilization-only placement)",
      congestion.run, {}),
+    ("fleet (coupled multi-tree vs independent per-tree solves)",
+     fleet.run, {}),
     ("beyond_bottleneck (paper §8 conjecture)", beyond_bottleneck.run, {}),
     ("beyond_budget (paper §8 open problem 2)", beyond_budget.run, {}),
     ("recovery (preplan cache + degraded mode + chaos)", recovery.run, {}),
@@ -43,6 +45,7 @@ FAST_OVERRIDES = {
     "fig11_scalefree": dict(reps=2, sizes=(256, 512, 1024)),
     "engine_throughput": dict(reps=2, batches=(8, 64)),
     "congestion (": dict(tenants=(8,), max_rounds=4, reps=1),
+    "fleet (": dict(tenants=(8,), max_rounds=4, reps=1),
     "recovery (": dict(n_pods=2, racks=2, events=30),
 }
 

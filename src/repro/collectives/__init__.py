@@ -1,12 +1,15 @@
-from .schedule import (CongestionPlan, ReduceProgram, TenantPlan,
-                       build_program, plan, plan_batch, plan_congestion)
-from .topology import (ClusterTopology, chip_level_tree, degrade_links,
-                       fail_devices, fail_switches, fleet_tree)
+from .schedule import (CongestionPlan, FleetPlan, ReduceProgram, TenantPlan,
+                       build_program, plan, plan_batch, plan_congestion,
+                       plan_fleet)
+from .topology import (ClusterTopology, Fleet, build_fleet, chip_level_tree,
+                       degrade_links, fail_devices, fail_switches,
+                       fleet_tree)
 from .tree_allreduce import tree_allreduce, tree_allreduce_tree
 
 __all__ = [
-    "CongestionPlan", "ReduceProgram", "TenantPlan", "build_program",
-    "plan", "plan_batch", "plan_congestion", "ClusterTopology",
-    "chip_level_tree", "fleet_tree", "fail_devices", "fail_switches",
-    "degrade_links", "tree_allreduce", "tree_allreduce_tree",
+    "CongestionPlan", "FleetPlan", "ReduceProgram", "TenantPlan",
+    "build_program", "plan", "plan_batch", "plan_congestion", "plan_fleet",
+    "ClusterTopology", "Fleet", "build_fleet", "chip_level_tree",
+    "fleet_tree", "fail_devices", "fail_switches", "degrade_links",
+    "tree_allreduce", "tree_allreduce_tree",
 ]

@@ -15,7 +15,19 @@ import numpy as np
 from ..core.reduce import messages_up, phi
 from ..core import baselines
 from ..engine.options import EngineOptions, resolve_options
-from .topology import ClusterTopology
+from .topology import ClusterTopology, Fleet
+
+
+def _check_capacity(capacity, n: int, where: str):
+    """Boundary validation of a per-switch capacity vector: shape (n,),
+    finite, non-negative. Returns the float64 copy the engine consumes."""
+    c = np.asarray(capacity, np.float64)
+    if c.shape != (n,):
+        raise ValueError(f"{where}: capacity shape {c.shape} != ({n},)")
+    if not np.all(np.isfinite(c)) or np.any(c < 0):
+        raise ValueError(f"{where}: capacity must be finite and "
+                         "non-negative")
+    return c
 
 
 @dataclasses.dataclass
@@ -190,8 +202,9 @@ def plan_batch(topos: list[ClusterTopology], k: int,
     and costs the program builder needs ever leave the accelerator, and
     same-shape scenario fleets amortize to a single compiled executable
     (ragged fleets bucket onto few, see ``build_forest``). Engine behavior
-    comes from ``options=EngineOptions(...)`` (legacy engine keyword
-    arguments still work for one release, with a ``DeprecationWarning``).
+    comes from ``options=EngineOptions(...)`` — the only spelling; the
+    PR-4 legacy-kwargs shim is gone (stray kwargs raise ``TypeError``
+    with the migration at this boundary).
     Other strategies fall back to the serial per-instance baselines.
     Returns ``[TenantPlan]`` in input order (each unpacks as the
     historical ``(blue, program)`` pair).
@@ -258,6 +271,18 @@ def plan_congestion(topo: ClusterTopology, k: int,
         raise ValueError("pass exactly one of loads / count")
     if loads is None:
         loads = [topo.load] * count
+    # boundary validation (parity with plan_batch): a per-tenant avail list
+    # must pair positionally, and a malformed capacity vector fails here,
+    # not deep inside the engine
+    if avails is not None and not isinstance(avails, np.ndarray):
+        avails = list(avails)
+        if len(avails) != len(loads):
+            raise ValueError(
+                f"{len(avails)} avail masks for {len(loads)} tenants — "
+                "plan_congestion pairs them positionally")
+    if driver_kw.get("capacity") is not None:
+        driver_kw["capacity"] = _check_capacity(
+            driver_kw["capacity"], topo.tree.n, "plan_congestion")
     if topo.blocked is not None:
         # blocked switches leave Lambda for every tenant
         if avails is None or isinstance(avails, np.ndarray):
@@ -272,3 +297,126 @@ def plan_congestion(topo: ClusterTopology, k: int,
         prog = build_program(tenant_topo, blue)
         plans.append(TenantPlan(blue, prog, prog.utilization))
     return CongestionPlan(plans, res)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """:func:`plan_fleet`'s result: per-tenant plans + fleet diagnostics.
+
+    ``plans`` is a list of :class:`TenantPlan` in tenant order (each
+    tenant's blue mask and program live on its *own* tree — look up the
+    tree with ``tree_of``); ``result`` is the driver's
+    ``CongestionResult`` with per-link arrays in the fleet's global
+    link-id space (tree segments first, shared-core links last).
+    Unpacks as the ``(planned, result)`` pair like
+    :class:`CongestionPlan`."""
+
+    plans: list
+    result: object                 # repro.engine.CongestionResult
+    tree_of: np.ndarray            # (T,) tenant -> tree index
+
+    def __iter__(self):
+        return iter((self.plans, self.result))
+
+    @property
+    def max_congestion(self) -> float:
+        return self.result.max_congestion
+
+    @property
+    def improvement(self) -> float:
+        return self.result.improvement
+
+    @property
+    def core_congestion(self):
+        return self.result.core_congestion
+
+
+def plan_fleet(fleet: Fleet, k: int,
+               loads: list[np.ndarray] | None = None,
+               tree_of: list[int] | None = None,
+               counts: list[int] | None = None,
+               avails: list[np.ndarray | None] | None = None,
+               **driver_kw) -> FleetPlan:
+    """Congestion-coupled planning across a multi-tree fleet.
+
+    T tenants spread over the fleet's N aggregation trees, solved
+    *jointly* by :func:`repro.engine.solve_fleet`: every penalty round
+    profiles the union of tree-local links and the fleet's shared-core
+    links, so tenants on different trees trade placements through the
+    links they share — two independent :func:`plan_congestion` calls
+    cannot see that coupling. Tenant assignment comes either from
+    ``counts`` (per-tree tenant counts; tenant loads default to each
+    tree's ``topo.load`` — the admission shape) or from explicit
+    ``loads`` + ``tree_of`` (one load vector per tenant, shaped for its
+    own tree). ``avails`` is an optional per-tenant mask list; each
+    tree's fault domains (``topo.blocked``) are subtracted for its own
+    tenants. ``capacity`` in ``driver_kw`` is a per-*tree* list of
+    capacity vectors, validated here at the call boundary. Compiles one
+    :class:`ReduceProgram` per tenant on its own tree and returns a
+    :class:`FleetPlan`.
+
+    For an N=1 fleet with no core links this is exactly
+    :func:`plan_congestion` on the single topology — same masks, same
+    costs, same round history (the engine path is shared, not parallel).
+    """
+    if not isinstance(fleet, Fleet):
+        raise TypeError("plan_fleet needs a Fleet; wrap a single topology "
+                        "with Fleet.single(topo)")
+    N = fleet.n_trees
+    if (loads is None) == (counts is None):
+        raise ValueError("pass exactly one of loads / counts")
+    if counts is not None:
+        if tree_of is not None:
+            raise ValueError("tree_of is derived from counts — pass it "
+                             "only with explicit loads")
+        counts = [int(c) for c in counts]
+        if len(counts) != N or any(c < 1 for c in counts):
+            raise ValueError(f"counts must give >=1 tenants for each of "
+                             f"the {N} trees, got {counts}")
+        tree_of = [g for g, c in enumerate(counts) for _ in range(c)]
+        loads = [fleet.topos[g].load for g in tree_of]
+    else:
+        if tree_of is None:
+            raise ValueError("explicit loads need tree_of (one tree index "
+                             "per tenant)")
+        tree_of = [int(g) for g in tree_of]
+        loads = list(loads)
+        if len(tree_of) != len(loads):
+            raise ValueError(f"{len(tree_of)} tree indices for "
+                             f"{len(loads)} loads")
+    T = len(loads)
+    tid = np.asarray(tree_of, np.int32)
+    if T and (tid.min() < 0 or tid.max() >= N):
+        raise ValueError(f"tree_of entries must be in [0, {N})")
+    if avails is not None:
+        avails = list(avails)
+        if len(avails) != T:
+            raise ValueError(f"{len(avails)} avail masks for {T} tenants — "
+                             "plan_fleet pairs them positionally")
+    else:
+        avails = [None] * T
+    # per-tree fault domains + mask validation at the boundary
+    avails = [fleet.topos[g].candidates(av)
+              for g, av in zip(tree_of, avails)]
+    if driver_kw.get("capacity") is not None:
+        caps = list(driver_kw["capacity"])
+        if len(caps) != N:
+            raise ValueError(f"{len(caps)} capacity vectors for {N} trees "
+                             "— plan_fleet takes one per tree")
+        driver_kw["capacity"] = [
+            _check_capacity(c, fleet.topos[g].tree.n, "plan_fleet")
+            for g, c in enumerate(caps)]
+    from ..engine import solve_fleet
+    res = solve_fleet([tp.tree for tp in fleet.topos], loads, tid, k,
+                      avails,
+                      core_rho=fleet.core_rho if fleet.n_core else None,
+                      core_path=fleet.core_path if fleet.n_core else None,
+                      **driver_kw)
+    plans = []
+    for t, (L, g) in enumerate(zip(loads, tree_of, strict=True)):
+        tp = fleet.topos[g]
+        blue = res.blue[t, : tp.tree.n]
+        tenant_topo = dataclasses.replace(tp, load=np.asarray(L, np.int64))
+        prog = build_program(tenant_topo, blue)
+        plans.append(TenantPlan(blue, prog, prog.utilization))
+    return FleetPlan(plans, res, tid)

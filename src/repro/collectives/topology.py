@@ -41,13 +41,20 @@ class ClusterTopology:
         ``avail`` is an optional extra mask (e.g. the orchestrator's
         residual-capacity snapshot); the result is its intersection with
         the non-blocked switches, or ``None`` when neither constrains.
+        A mask whose shape is not one flag per switch raises here, at the
+        planner boundary, instead of broadcasting somewhere in the engine.
         """
+        if avail is not None:
+            avail = np.asarray(avail, bool)
+            if avail.shape != (self.tree.n,):
+                raise ValueError(f"avail shape {avail.shape} != "
+                                 f"({self.tree.n},) — one flag per switch")
         if self.blocked is None:
             return avail
         cand = ~self.blocked
         if avail is None:
             return cand
-        return np.asarray(avail, bool) & cand
+        return avail & cand
 
 
 def fleet_tree(n_pods: int = 2, racks_per_pod: int = 4,
@@ -203,3 +210,112 @@ def degrade_links(topo: ClusterTopology,
                              f"positive finite number, got {f}")
         rho[v] = rho[v] / f
     return dataclasses.replace(topo, tree=Tree(t.parent, rho))
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """N aggregation trees hanging off a shared core (multi-tree setting).
+
+    Each tree is a full :class:`ClusterTopology`; the core is a flat set of
+    C extra links with per-link reciprocal rates ``core_rho``. Every
+    root-crossing message of a tenant on tree g additionally transits the
+    core links in ``core_path[g]`` (its root -> destination path through
+    the shared core), which is how tenants on *different* trees become
+    congestion-coupled: they meet on shared core link ids.
+
+    Link ids live in one **global link-id space** so per-link traffic from
+    different trees lands in one congestion profile::
+
+        [0, n_0)                      tree 0's switch up-links
+        [off_g, off_g + n_g)          tree g's up-links, off_g = sum n_<g
+        [core_offset, core_offset+C)  the shared-core links
+
+    The single-tree case is the degenerate ``N=1, C=0`` fleet
+    (:meth:`single`), not a parallel code path.
+    """
+
+    topos: tuple[ClusterTopology, ...]
+    core_rho: np.ndarray                    # (C,) reciprocal rates; C may be 0
+    core_path: tuple[tuple[int, ...], ...]  # per tree: core link ids crossed
+
+    def __post_init__(self):
+        if not self.topos:
+            raise ValueError("empty fleet")
+        core_rho = np.asarray(self.core_rho, np.float64)
+        object.__setattr__(self, "core_rho", core_rho)
+        if core_rho.ndim != 1:
+            raise ValueError(f"core_rho must be 1-D, got shape "
+                             f"{core_rho.shape}")
+        if core_rho.size and not (np.isfinite(core_rho).all()
+                                  and (core_rho > 0).all()):
+            raise ValueError("core_rho entries must be positive and finite")
+        if len(self.core_path) != len(self.topos):
+            raise ValueError(f"{len(self.core_path)} core paths for "
+                             f"{len(self.topos)} trees")
+        C = core_rho.size
+        path = tuple(tuple(int(c) for c in p) for p in self.core_path)
+        object.__setattr__(self, "core_path", path)
+        for g, p in enumerate(path):
+            if len(set(p)) != len(p):
+                raise ValueError(f"core path of tree {g} repeats a link: {p}")
+            for c in p:
+                if not 0 <= c < C:
+                    raise ValueError(f"core link {c} on tree {g}'s path out "
+                                     f"of range [0, {C})")
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.topos)
+
+    @property
+    def n_core(self) -> int:
+        return int(self.core_rho.size)
+
+    @property
+    def link_offsets(self) -> tuple[int, ...]:
+        """Global-link-id segment start of each tree's up-links."""
+        offs, s = [], 0
+        for tp in self.topos:
+            offs.append(s)
+            s += tp.tree.n
+        return tuple(offs)
+
+    @property
+    def core_offset(self) -> int:
+        """First global link id of the shared-core segment."""
+        return sum(tp.tree.n for tp in self.topos)
+
+    @property
+    def n_links(self) -> int:
+        return self.core_offset + self.n_core
+
+    @classmethod
+    def single(cls, topo: ClusterTopology) -> "Fleet":
+        """The degenerate one-tree fleet (no shared core)."""
+        return cls(topos=(topo,), core_rho=np.zeros(0, np.float64),
+                   core_path=((),))
+
+
+def build_fleet(n_trees: int = 2, n_pods: int = 2, racks_per_pod: int = 4,
+                chips_per_rack: int = 4, *, spine_rho: float = RHO_DCN,
+                uplink_rho: float | None = None) -> Fleet:
+    """N :func:`fleet_tree` topologies sharing one core spine link.
+
+    Every tree's root-crossing traffic transits a single shared DCN spine
+    (core link with rate ``spine_rho``) — the minimal fleet in which trees
+    contend. ``uplink_rho`` additionally gives each tree a dedicated core
+    up-link (tree root -> spine) on its path, modelling per-tree core
+    attachment capacity.
+    """
+    if n_trees < 1:
+        raise ValueError(f"need at least one tree, got {n_trees}")
+    topos = tuple(fleet_tree(n_pods, racks_per_pod, chips_per_rack)
+                  for _ in range(n_trees))
+    if uplink_rho is None:
+        core_rho = np.asarray([spine_rho], np.float64)
+        core_path = tuple((0,) for _ in range(n_trees))
+    else:
+        core_rho = np.asarray([uplink_rho] * n_trees + [spine_rho],
+                              np.float64)
+        core_path = tuple((g, n_trees) for g in range(n_trees))
+    return Fleet(topos=topos, core_rho=core_rho, core_path=core_path)

@@ -221,3 +221,78 @@ def max_congestion(t: Tree, loads, blues,
                    rho_weighted: bool = False) -> float:
     """Convenience: max-link congestion of per-tenant placements on ``t``."""
     return measure_fleet(t, loads, blues, rho_weighted).max_congestion
+
+
+class MultiFleetMeasurement(NamedTuple):
+    """Congestion measurement of T placements across N trees + shared core.
+
+    Link ids follow the fleet's global link-id space: tree g's up-links
+    occupy ``[link_off[g], link_off[g] + n_g)`` in ``congestion``, the
+    shared-core links fill the final ``C`` entries (also broken out as
+    ``core_congestion``). ``msgs`` rows are tree-local (tenant t's counts
+    on its own tree, zero-padded to the widest tree); ``costs`` stay
+    tree-local utilization on each tree's original rho — identical
+    semantics to :func:`measure_fleet` for the N=1 fleet.
+    """
+
+    msgs: np.ndarray            # (T, max_g n_g) tree-local message counts
+    congestion: np.ndarray      # (sum n_g + C,) global per-link profile
+    core_congestion: np.ndarray  # (C,)
+    max_congestion: float
+    mean_congestion: float      # mean over links carrying traffic
+    costs: np.ndarray           # (T,) per-tenant utilization on own tree
+    link_off: np.ndarray        # (N,) global segment start per tree
+
+
+def measure_fleet_multi(trees, tree_of, loads, blues, core_rho=None,
+                        core_path=None,
+                        rho_weighted: bool = False) -> MultiFleetMeasurement:
+    """Host-side measurement for a multi-tree fleet sharing a core.
+
+    ``trees``: the N distinct trees; ``tree_of[t]`` names tenant t's tree;
+    ``core_rho`` (C,) / ``core_path`` (per tree, core link ids crossed)
+    describe the shared core — a tenant's root-crossing messages (the
+    count on its root's up-edge) transit every core link on its tree's
+    path, which is where tenants on different trees meet. Congestion on a
+    core link is the sum of those root counts over the tenants crossing
+    it (times ``core_rho`` when ``rho_weighted``). For ``N=1, C=0`` this
+    reduces exactly to :func:`measure_fleet` — same sums, same casts.
+    """
+    trees = list(trees)
+    tid = np.asarray(list(tree_of), np.int64)
+    T = tid.size
+    crho = (np.zeros(0, np.float64) if core_rho is None
+            else np.asarray(core_rho, np.float64))
+    C = crho.size
+    path = (tuple(() for _ in trees) if core_path is None
+            else tuple(tuple(int(c) for c in p) for p in core_path))
+    tree_n = np.asarray([t.n for t in trees], np.int64)
+    link_off = np.concatenate([[0], np.cumsum(tree_n)[:-1]]).astype(np.int64)
+    n_big = int(tree_n.max())
+    msgs = np.zeros((T, n_big), np.int64)
+    costs = np.zeros(T, np.float64)
+    for t in range(T):
+        g = int(tid[t])
+        tr = trees[g]
+        m = messages_up(tr, loads[t], blues[t])
+        msgs[t, : tr.n] = m
+        costs[t] = (m * tr.rho).sum()
+    segs = []
+    for g, tr in enumerate(trees):
+        rows = msgs[tid == g][:, : tr.n]
+        prof_g = congestion_profile(rows, tr.rho if rho_weighted else None)
+        segs.append(prof_g)
+    root_msgs = np.asarray(
+        [msgs[t, trees[int(tid[t])].root] for t in range(T)], np.int64)
+    core = np.zeros(C, np.float64 if rho_weighted else np.int64)
+    for c in range(C):
+        crossing = np.asarray([c in path[int(tid[t])] for t in range(T)])
+        cnt = root_msgs[crossing].sum()
+        core[c] = cnt * crho[c] if rho_weighted else cnt
+    prof = np.concatenate(segs + [core]) if C else np.concatenate(segs)
+    carrying = prof[prof > 0]
+    return MultiFleetMeasurement(
+        msgs=msgs, congestion=prof, core_congestion=core,
+        max_congestion=float(prof.max()),
+        mean_congestion=float(carrying.mean()) if carrying.size else 0.0,
+        costs=costs, link_off=link_off)

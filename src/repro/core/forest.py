@@ -341,3 +341,103 @@ def build_forest(
     _FORESTS_BUILT += 1
     _LAYOUTS_SEEN.add(layout_key(f))
     return f
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetLayout:
+    """Per-tree segment + shared-link index maps for a multi-tree forest.
+
+    ``build_fleet_forest`` packs T tenant instances — tenant t living on
+    tree ``tree_of[t]`` — through the ordinary :func:`build_forest` path
+    (a single-tree fleet therefore produces a bit-identical ``Forest`` to
+    today's ``build_forest``), and this side table records how the
+    instances map back onto the fleet's **global link-id space**: tree g's
+    switch up-links occupy ``[link_off[g], link_off[g] + tree_n[g])`` and
+    the C shared-core links occupy ``[core_offset, core_offset + C)``.
+    """
+
+    tree_of: np.ndarray            # (T,) int32 tenant -> tree index
+    n_trees: int
+    rep: np.ndarray                # (N,) int64 first tenant on each tree —
+                                   #   that batch row carries the tree's
+                                   #   canonical layout (slot_of etc.)
+    tree_n: np.ndarray             # (N,) int64 real node count per tree
+    link_off: np.ndarray           # (N,) int64 global-link segment starts
+    core_offset: int               # first global id of the core segment
+    core_rho: np.ndarray           # (C,) float64; C may be 0
+    core_path: tuple[tuple[int, ...], ...]  # per tree: core links crossed
+    core_inc: np.ndarray           # (T, C) bool — tenant t crosses core c
+
+    @property
+    def n_core(self) -> int:
+        return int(self.core_rho.size)
+
+    @property
+    def n_links(self) -> int:
+        return self.core_offset + self.n_core
+
+
+def build_fleet_forest(
+    trees: Sequence[Tree],
+    loads: Sequence[np.ndarray],
+    tree_of: Sequence[int],
+    avail: Sequence[np.ndarray] | None = None,
+    *,
+    core_rho: np.ndarray | None = None,
+    core_path: Sequence[Sequence[int]] | None = None,
+    bucket: bool = True,
+) -> tuple[Forest, FleetLayout]:
+    """Pack T tenants living on N distinct trees into one Forest + layout.
+
+    ``trees`` holds the N *distinct* tree objects; ``tree_of[t]`` names
+    tenant t's tree. The Forest itself is built by replicating each
+    tenant's tree into the batch — exactly ``build_forest([trees[g] for g
+    in tree_of], ...)`` — so for ``tree_of == [0]*T`` the packed layout is
+    bit-identical to the single-tree call it refactors. Every tree must
+    carry at least one tenant (the per-tree congestion profile needs a
+    representative batch row for its layout).
+    """
+    N = len(trees)
+    if N == 0:
+        raise ValueError("empty fleet")
+    tid = np.asarray(list(tree_of), np.int32)
+    T = tid.size
+    if T == 0:
+        raise ValueError("no tenants")
+    if len(loads) != T:
+        raise ValueError(f"{len(loads)} loads for {T} tenants")
+    if tid.min() < 0 or tid.max() >= N:
+        raise ValueError(f"tree_of entries must lie in [0, {N})")
+    rep = np.full(N, -1, np.int64)
+    for t in range(T - 1, -1, -1):
+        rep[tid[t]] = t
+    if (rep < 0).any():
+        empty = [int(g) for g in np.nonzero(rep < 0)[0]]
+        raise ValueError(f"trees {empty} carry no tenant — every fleet "
+                         f"tree needs at least one")
+    tree_n = np.asarray([t.n for t in trees], np.int64)
+    link_off = np.concatenate([[0], np.cumsum(tree_n)[:-1]])
+    core_offset = int(tree_n.sum())
+    crho = (np.zeros(0, np.float64) if core_rho is None
+            else np.asarray(core_rho, np.float64))
+    C = crho.size
+    if crho.ndim != 1:
+        raise ValueError(f"core_rho must be 1-D, got shape {crho.shape}")
+    path = (tuple(() for _ in range(N)) if core_path is None
+            else tuple(tuple(int(c) for c in p) for p in core_path))
+    if len(path) != N:
+        raise ValueError(f"{len(path)} core paths for {N} trees")
+    core_inc = np.zeros((T, C), bool)
+    for g, p in enumerate(path):
+        for c in p:
+            if not 0 <= c < C:
+                raise ValueError(f"core link {c} on tree {g}'s path out of "
+                                 f"range [0, {C})")
+        core_inc[tid == g] = np.isin(np.arange(C), list(p))
+    f = build_forest([trees[g] for g in tid], list(loads), avail,
+                     bucket=bucket)
+    lay = FleetLayout(tree_of=tid, n_trees=N, rep=rep, tree_n=tree_n,
+                      link_off=link_off.astype(np.int64),
+                      core_offset=core_offset, core_rho=crho,
+                      core_path=path, core_inc=core_inc)
+    return f, lay

@@ -9,12 +9,17 @@ sharing one tree — by default the whole round loop runs on device as one
 jitted ``lax.while_loop`` (see ``congestion.py``). Engine behavior is
 configured through the frozen :class:`EngineOptions` dataclass (see
 ``options.py``); the serial per-instance solvers stay in ``repro.core``.
+
+``solve_fleet`` generalizes the congestion loop to N aggregation trees
+hanging off a shared core: per-round profiling and penalty reweighting run
+over the union of tree-local and shared-core links inside the same jitted
+while-loop, and ``solve_congestion`` is its degenerate single-tree call.
 """
 from .batched import (BatchResult, cache_stats, color_batch, gather_batch,
                       solve_batch, solve_forest)
-from .congestion import CongestionResult, solve_congestion
+from .congestion import CongestionResult, solve_congestion, solve_fleet
 from .options import EngineOptions
 
 __all__ = ["BatchResult", "CongestionResult", "EngineOptions", "cache_stats",
            "color_batch", "gather_batch", "solve_batch", "solve_congestion",
-           "solve_forest"]
+           "solve_fleet", "solve_forest"]

@@ -61,7 +61,8 @@ from ..core.forest import Forest, build_forest, layout_stats
 from ..core.tree import Tree
 from ..core.tropical import BIG, minplus_batch
 from ..kernels.minplus.levelfold import (chain_fold, level_fold,
-                                         minplus_fused, rho_up_from_edges)
+                                         minplus_fused, rho_up_from_edges,
+                                         scaled_edges)
 from .options import EngineOptions, resolve_options
 
 # back-compat alias: the engine's fused convolution now lives with the
@@ -442,7 +443,25 @@ def _override_rho(base_edge: jax.Array, anc: jax.Array, valid: jax.Array,
     """Effective packed rho-up table for a node-indexed scale factor."""
     s_slot = jnp.where(real, jnp.take_along_axis(
         scale.astype(base_edge.dtype), sn, axis=1), 1)
-    return rho_up_from_edges(base_edge * s_slot, anc, valid)
+    return rho_up_from_edges(scaled_edges(base_edge, s_slot), anc, valid)
+
+
+@jax.jit
+def _override_rho_add(base_edge: jax.Array, anc: jax.Array, valid: jax.Array,
+                      sn: jax.Array, real: jax.Array, scale: jax.Array,
+                      extra: jax.Array, root_slot: jax.Array) -> jax.Array:
+    """:func:`_override_rho` plus a per-instance additive root-edge term.
+
+    ``extra``: (B,) — the fleet driver's shared-core transit extension on
+    each instance's root up-edge (see
+    :func:`~repro.kernels.minplus.levelfold.scaled_edges`); ``root_slot``:
+    (B,) int32 root slot per instance.
+    """
+    s_slot = jnp.where(real, jnp.take_along_axis(
+        scale.astype(base_edge.dtype), sn, axis=1), 1)
+    edges = scaled_edges(base_edge, s_slot, extra.astype(base_edge.dtype),
+                         root_slot)
+    return rho_up_from_edges(edges, anc, valid)
 
 
 def _gather_device(f: Forest, k: int, dtype, use_pallas: bool,
@@ -620,6 +639,7 @@ def solve_forest(
     *,
     options: EngineOptions | None = None,
     rho_scale: np.ndarray | jax.Array | None = None,
+    rho_root_add: np.ndarray | jax.Array | None = None,
     **engine_kw,
 ) -> BatchResult:
     """:func:`solve_batch` for a pre-built Forest (amortizes packing).
@@ -628,8 +648,8 @@ def solve_forest(
     the accelerator and only the ``(B, n_max)`` blue masks plus ``(B,)``
     costs are transferred. Engine behavior is configured through
     ``options`` (:class:`~repro.engine.options.EngineOptions`); the old
-    keyword spelling (``color=False``, ``debug_tables=True``, …) still
-    works for one release behind a ``DeprecationWarning``.
+    keyword spelling (``color=False``, ``debug_tables=True``, …) is
+    removed — stray kwargs raise ``TypeError`` with the migration.
 
     ``rho_scale`` — a ``(B, n_max)`` node-indexed multiplier on each
     instance's *edge* rates — re-solves the prebuilt Forest under
@@ -640,6 +660,12 @@ def solve_forest(
     serves all overrides. This is the congestion driver's re-solve
     primitive. Incompatible with ``debug_tables`` (the host replay reads
     the unscaled ``Forest.rho_up``).
+
+    ``rho_root_add`` — a ``(B,)`` *additive* extension of each instance's
+    root up-edge rate, applied on top of ``rho_scale`` (which it
+    requires): the fleet congestion driver's shared-core transit term —
+    core hops are in series with the root hop, so their penalty-weighted
+    rates extend the root edge additively rather than multiplicatively.
     """
     opts = resolve_options(options, engine_kw, "solve_forest")
     if k < 0:
@@ -648,6 +674,9 @@ def solve_forest(
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     inputs = _device_inputs(f, opts.dtype)
+    if rho_root_add is not None and rho_scale is None:
+        raise ValueError("rho_root_add extends a rho_scale re-solve; pass "
+                         "rho_scale (ones for a pure additive override)")
     if rho_scale is not None:
         if opts.debug_tables:
             raise ValueError("rho_scale re-solves on device-side effective "
@@ -657,8 +686,17 @@ def solve_forest(
             raise ValueError(f"rho_scale shape {np.shape(rho_scale)} != "
                              f"{(f.batch, f.n_max)} (node-indexed, padded)")
         base, anc, valid, sn, real = _override_inputs(f, opts.dtype)
-        R = _override_rho(base, anc, valid, sn, real,
-                          jnp.asarray(rho_scale))
+        if rho_root_add is None:
+            R = _override_rho(base, anc, valid, sn, real,
+                              jnp.asarray(rho_scale))
+        else:
+            if tuple(np.shape(rho_root_add)) != (f.batch,):
+                raise ValueError(
+                    f"rho_root_add shape {np.shape(rho_root_add)} != "
+                    f"({f.batch},) (one root extension per instance)")
+            R = _override_rho_add(base, anc, valid, sn, real,
+                                  jnp.asarray(rho_scale),
+                                  jnp.asarray(rho_root_add), inputs[8])
         inputs = inputs[:4] + (R,) + inputs[5:]
     blocks = _gather_device(f, k, opts.dtype, use_pallas, opts.interpret,
                             opts.cap, inputs)

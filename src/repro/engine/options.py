@@ -12,16 +12,16 @@ replaces that with one frozen dataclass validated at the call boundary:
 Unknown or misspelled fields fail immediately in the ``EngineOptions``
 constructor (with a did-you-mean hint via :func:`resolve_options`), and a
 frozen instance hashes/compares by value, so it can key jit caches
-directly. The old kwargs spelling still works for one release through
-:func:`resolve_options` — it raises a :class:`DeprecationWarning` naming
-the migration, and CI runs a ``-W error::DeprecationWarning`` job so
-internal callers cannot quietly keep using it.
+directly. The old kwargs spelling had a one-release deprecation window
+(PR 4) and is now **removed**: :func:`resolve_options` raises a
+``TypeError`` naming the migration. CI keeps the
+``-W error::DeprecationWarning`` job as the guard that no new deprecated
+spellings creep into the planner surface.
 """
 from __future__ import annotations
 
 import dataclasses
 import difflib
-import warnings
 from typing import Any
 
 import jax.numpy as jnp
@@ -56,24 +56,23 @@ class EngineOptions:
 
 _FIELDS = tuple(f.name for f in dataclasses.fields(EngineOptions))
 
-_DEPRECATION = (
-    "passing engine options as keyword arguments ({names}) is deprecated; "
-    "pass options=EngineOptions({example}) instead — the kwargs spelling "
-    "will be removed next release"
+_REMOVED = (
+    "engine options are no longer accepted as keyword arguments "
+    "({names}) — the PR-4 deprecation window has closed; pass "
+    "options=EngineOptions({example}) instead"
 )
 
 
 def resolve_options(options: EngineOptions | None,
                     engine_kw: dict,
-                    where: str,
-                    stacklevel: int = 3) -> EngineOptions:
-    """Merge the new ``options=`` spelling with the deprecated kwargs shim.
+                    where: str) -> EngineOptions:
+    """Validate the ``options=`` spelling at the call boundary.
 
     * ``options`` alone → returned as-is (defaults when None);
-    * legacy kwargs alone → validated against the :class:`EngineOptions`
-      fields (unknown names raise ``TypeError`` *here*, at the call
-      boundary, with a did-you-mean hint) and converted, with a
-      ``DeprecationWarning`` pointing at the caller;
+    * any stray keyword argument → ``TypeError`` *here*, at the call
+      boundary: a misspelled option gets a did-you-mean hint, a known
+      field name gets the ``options=EngineOptions(...)`` migration (the
+      PR-4 kwargs shim is gone);
     * both at once → ``TypeError`` (ambiguous precedence is never guessed).
     """
     if not engine_kw:
@@ -98,9 +97,6 @@ def resolve_options(options: EngineOptions | None,
         raise TypeError(
             f"{where}: unknown engine option(s) {', '.join(hints)}; "
             f"valid options: {', '.join(_FIELDS)}")
-    warnings.warn(
-        _DEPRECATION.format(
-            names=", ".join(sorted(engine_kw)),
-            example=", ".join(f"{k}=..." for k in sorted(engine_kw))),
-        DeprecationWarning, stacklevel=stacklevel)
-    return EngineOptions(**engine_kw)
+    raise TypeError(f"{where}: " + _REMOVED.format(
+        names=", ".join(sorted(engine_kw)),
+        example=", ".join(f"{k}=..." for k in sorted(engine_kw))))

@@ -119,6 +119,30 @@ def rho_up_from_edges(rho_edge: jax.Array, anc: jax.Array,
     return jnp.stack(rows, axis=2)
 
 
+def scaled_edges(rho_edge: jax.Array, scale: jax.Array,
+                 extra: jax.Array | None = None,
+                 root_idx: jax.Array | None = None) -> jax.Array:
+    """Effective per-edge rates: ``rho_edge * scale``, optionally with an
+    additive extension on each instance's root edge.
+
+    The additive term is how the fleet congestion driver folds shared-core
+    transit into the per-tree DP: a tenant's root-crossing messages also
+    traverse its core path, so the core links' (penalty-weighted) rates
+    extend the root up-edge — additively, because core hops are in series
+    with the root hop. ``extra``: (B,) per-instance extension; ``root_idx``:
+    (B,) int column of each instance's root edge. Both loop flavors of the
+    driver call this single definition (multiplied then extended in the
+    same order), which is what keeps their effective edge rates
+    bit-identical; :func:`rho_up_from_edges` then accumulates them into
+    the packed rho-up table on device.
+    """
+    edges = rho_edge * scale
+    if extra is None:
+        return edges
+    B = edges.shape[0]
+    return edges.at[jnp.arange(B), root_idx].add(extra)
+
+
 def _minplus_loop(a: jax.Array, b: jax.Array) -> jax.Array:
     """minplus_fused spelled as a fori_loop (for kernel bodies).
 

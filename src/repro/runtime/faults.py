@@ -4,7 +4,9 @@ Reliability claims about the recovery path are only as good as the event
 sequences they were tested under. This module makes those sequences
 *reproducible*: :func:`generate_scenario` derives a feasibility-checked
 event stream from a seed (device/switch/link faults, straggler storms,
-correlated rack failures, recoveries, optional multi-workload admissions),
+correlated rack failures, recoveries, link-degrade preplanning that later
+degrade events replay against the cache, optional multi-workload
+admissions),
 and :class:`ChaosHarness` steps an :class:`~repro.runtime.Orchestrator`
 through it, re-checking the system's safety invariants after *every*
 event:
@@ -36,7 +38,8 @@ from .orchestrator import Orchestrator, OrchestratorConfig
 
 KINDS = ("fail_device", "recover_device", "fail_switch", "recover_switch",
          "degrade_link", "recover_link", "straggler_storm",
-         "recover_quarantined", "fail_rack", "admit_workloads")
+         "recover_quarantined", "fail_rack", "admit_workloads",
+         "preplan_links")
 
 DEGRADE_FACTORS = (0.5, 0.25, 0.125)
 
@@ -110,6 +113,10 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
     quarantined: set[int] = set()
     blocked: set[int] = set()
     degraded: dict[int, float] = {}
+    # link-degrade what-ifs the stream has preplanned; later degrade_link
+    # events preferentially replay them, exercising the cache-served
+    # recovery path (preplan_link_degrades -> on_link_degrade lookup)
+    preplanned_links: list[tuple[int, float]] = []
 
     def healthy() -> list[int]:
         return [d for d in range(n_dev)
@@ -130,6 +137,8 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
         menu.append(("degrade_link", 2.0))
         if degraded:
             menu.append(("recover_link", 2.0))
+        if len(degraded) < n_sw:
+            menu.append(("preplan_links", 1.0))
         storm_cap = min(_storm_limit(len(alive), cfg.straggler_quantile),
                         len(alive) - min_healthy)
         if storm_cap >= 1:
@@ -174,8 +183,17 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
             blocked.discard(s)
             events.append(FaultEvent("recover_switch", switches=(s,)))
         elif kind == "degrade_link":
-            v = int(rng.integers(0, n_sw))
-            f = float(rng.choice(DEGRADE_FACTORS))
+            # half the time replay a preplanned what-if (when one is still
+            # applicable): its fingerprint matches iff no other link state
+            # changed since the preplan, so the stream exercises both the
+            # cache-hit and the honest-miss recovery paths
+            usable = [(v, f) for v, f in preplanned_links
+                      if v not in degraded]
+            if usable and rng.random() < 0.5:
+                v, f = usable[int(rng.integers(len(usable)))]
+            else:
+                v = int(rng.integers(0, n_sw))
+                f = float(rng.choice(DEGRADE_FACTORS))
             degraded[v] = f
             events.append(FaultEvent("degrade_link", rates=((v, f),)))
         elif kind == "recover_link":
@@ -200,6 +218,15 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
             blocked.add(r)
             events.append(FaultEvent("fail_rack", devices=devs,
                                      switches=(r,)))
+        elif kind == "preplan_links":
+            cand = [v for v in range(n_sw) if v not in degraded]
+            m = int(rng.integers(1, min(3, len(cand)) + 1))
+            vs = rng.choice(cand, size=m, replace=False)
+            pairs = tuple(
+                (int(v), float(rng.choice(DEGRADE_FACTORS)))
+                for v in sorted(int(v) for v in vs))
+            preplanned_links.extend(pairs)
+            events.append(FaultEvent("preplan_links", rates=pairs))
         else:  # admit_workloads
             events.append(FaultEvent("admit_workloads",
                                      count=int(rng.integers(1, 3))))
@@ -257,6 +284,10 @@ class ChaosHarness:
             # rack switch's aggregation plane
             o.on_failure(list(ev.devices))
             o.on_switch_failure(list(ev.switches))
+        elif ev.kind == "preplan_links":
+            # one single-link what-if per preplanned pair: the matching
+            # real degrade_link later in the stream becomes a cache lookup
+            o.preplan_link_degrades([{v: f} for v, f in ev.rates])
         elif ev.kind == "admit_workloads":
             before = int(o._residual.sum())
             o.begin_workloads(ev.count)

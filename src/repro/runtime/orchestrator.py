@@ -36,8 +36,8 @@ import dataclasses
 import numpy as np
 
 from ..collectives.schedule import (ReduceProgram, build_program, plan,
-                                    plan_batch, plan_congestion)
-from ..collectives.topology import (ClusterTopology, degrade_links,
+                                    plan_batch, plan_congestion, plan_fleet)
+from ..collectives.topology import (ClusterTopology, Fleet, degrade_links,
                                     fail_devices)
 from .stragglers import StragglerPolicy, StragglerReport
 
@@ -55,8 +55,17 @@ class OrchestratorConfig:
 class Orchestrator:
     """Owns topology -> placement -> program; replans on events."""
 
-    def __init__(self, topo: ClusterTopology, cfg: OrchestratorConfig):
+    def __init__(self, topo: ClusterTopology | Fleet,
+                 cfg: OrchestratorConfig):
         self.cfg = cfg
+        # the orchestrator's own workload lives on the fleet's first tree;
+        # a plain topology is the degenerate single-tree fleet (N=1, no
+        # shared core) — one code path, not two
+        if isinstance(topo, Fleet):
+            self.fleet = topo
+            topo = topo.topos[0]
+        else:
+            self.fleet = Fleet.single(topo)
         self.topo0 = topo
         self.topo = topo
         n = topo.tree.n
@@ -64,9 +73,17 @@ class Orchestrator:
         self.quarantined = np.zeros(topo.n_devices, bool)
         self.switch_blocked = np.zeros(n, bool)   # dead aggregation planes
         self._link_rate = np.ones(n)              # up-link rate fraction
-        # residual aggregation capacity (None = unbounded)
+        # residual aggregation capacity (None = unbounded); one ledger per
+        # fleet tree — index 0 IS self._residual (same array object)
         self._residual = (np.full(n, cfg.capacity, np.int64)
                           if cfg.capacity is not None else None)
+        self._residuals = [self._residual] + [
+            np.full(tp.tree.n, cfg.capacity, np.int64)
+            if cfg.capacity is not None else None
+            for tp in self.fleet.topos[1:]]
+        # shared-core rates join every fingerprint: a placement solved
+        # against one core pricing must not serve a different one
+        self._core_key = self.fleet.core_rho.tobytes()
         self.stragglers = StragglerPolicy(
             topo.n_devices, quantile=cfg.straggler_quantile,
             slack=cfg.straggler_slack, patience=cfg.straggler_patience)
@@ -112,17 +129,22 @@ class Orchestrator:
         return r > 0
 
     def _fingerprint(self, dead: tuple | None = None,
-                     blocked: tuple | None = None) -> tuple:
+                     blocked: tuple | None = None,
+                     link_rate: np.ndarray | None = None,
+                     tree: int = 0) -> tuple:
         """Hashable key of everything the placement solve depends on:
-        dead devices, blocked switches, link rates, budget, strategy, and
-        the topology epoch (rescales invalidate everything)."""
+        the fleet tree id, dead devices, blocked switches, link rates
+        (current, or a what-if override), the shared-core rates, budget,
+        strategy, and the topology epoch (rescales invalidate
+        everything)."""
         if dead is None:
             dead = tuple(
                 np.nonzero(~self.alive | self.quarantined)[0].tolist())
         if blocked is None:
             blocked = tuple(np.nonzero(self.switch_blocked)[0].tolist())
-        return (self._topo_epoch, dead, blocked, self._link_rate.tobytes(),
-                self.cfg.k, self.cfg.strategy)
+        lr = self._link_rate if link_rate is None else link_rate
+        return (self._topo_epoch, int(tree), dead, blocked, lr.tobytes(),
+                self._core_key, self.cfg.k, self.cfg.strategy)
 
     def _preplan_store(self, fp: tuple, blue: np.ndarray, util: float,
                        avail: np.ndarray | None) -> None:
@@ -190,14 +212,18 @@ class Orchestrator:
         self._replace()
         return False
 
-    def _scenario_topo(self, dead: list[int]) -> ClusterTopology:
+    def _scenario_topo(self, dead: list[int],
+                       link_rate: np.ndarray | None = None
+                       ) -> ClusterTopology:
         """Effective topology for a given dead-device set, with the current
-        link degradations and blocked switches applied."""
+        (or what-if override) link degradations and blocked switches
+        applied."""
+        lr = self._link_rate if link_rate is None else link_rate
         topo = fail_devices(self.topo0, list(dead))
-        if (self._link_rate != 1.0).any():
+        if (lr != 1.0).any():
             topo = degrade_links(
                 topo, {int(v): float(f)
-                       for v, f in enumerate(self._link_rate) if f != 1.0})
+                       for v, f in enumerate(lr) if f != 1.0})
         if self.switch_blocked.any():
             topo = dataclasses.replace(topo,
                                        blocked=self.switch_blocked.copy())
@@ -388,12 +414,15 @@ class Orchestrator:
         n = new_topo.tree.n
         self.topo0 = new_topo
         self.topo = new_topo
+        self.fleet = Fleet.single(new_topo)   # rescale drains fleet trees
+        self._core_key = self.fleet.core_rho.tobytes()
         self.alive = np.ones(new_topo.n_devices, bool)
         self.quarantined = np.zeros(new_topo.n_devices, bool)
         self.switch_blocked = np.zeros(n, bool)
         self._link_rate = np.ones(n)
         self._residual = (np.full(n, self.cfg.capacity, np.int64)
                           if self.cfg.capacity is not None else None)
+        self._residuals = [self._residual]
         self.stragglers = StragglerPolicy(
             new_topo.n_devices, quantile=self.cfg.straggler_quantile,
             slack=self.cfg.straggler_slack,
@@ -418,8 +447,10 @@ class Orchestrator:
         self.utilization_history.append(prog.utilization)
         return prog
 
-    def begin_workloads(self, count: int, congestion_aware: bool = False,
+    def begin_workloads(self, count: int | None = None,
+                        congestion_aware: bool = False,
                         capacity_priced: bool = False,
+                        fleet: list[int] | None = None,
                         **driver_kw) -> list[ReduceProgram]:
         """Admit ``count`` workloads with one batched engine solve.
 
@@ -449,6 +480,17 @@ class Orchestrator:
         about to exhaust get priced up inside the penalty loop, steering
         tenants away *before* the claim accounting collides — fewer
         serial collision fallbacks, same bounded-capacity guarantee.
+
+        ``fleet=[c_0, .., c_{N-1}]`` (instead of ``count``) admits
+        ``c_g`` workloads onto tree ``g`` of the orchestrator's
+        :class:`~repro.collectives.topology.Fleet` with one *coupled*
+        :func:`~repro.collectives.schedule.plan_fleet` solve — tenants on
+        different trees trade placements through the fleet's shared core
+        links — and per-tree capacity claims: each tenant claims against
+        its own tree's residual ledger, collision fallbacks re-solve on
+        the tenant's own tree only. Requires ``congestion_aware=True``
+        (fleet admission *is* the congestion driver); a plain-topology
+        orchestrator accepts ``fleet=[c]`` as the degenerate N=1 case.
         """
         if self._residual is None:
             raise ValueError("begin_workloads needs capacity set")
@@ -459,6 +501,14 @@ class Orchestrator:
             what = sorted(driver_kw) if driver_kw else "capacity_priced"
             raise ValueError(f"driver options {what} only "
                              "apply with congestion_aware=True")
+        if (count is None) == (fleet is None):
+            raise ValueError("pass exactly one of count / fleet")
+        if fleet is not None:
+            if not congestion_aware:
+                raise ValueError("fleet admission is congestion-coupled; "
+                                 "pass congestion_aware=True")
+            return self._begin_fleet_workloads(
+                [int(c) for c in fleet], capacity_priced, driver_kw)
         if capacity_priced:
             if "capacity" in driver_kw:
                 raise ValueError("capacity_priced=True supplies the "
@@ -507,6 +557,65 @@ class Orchestrator:
             self.last_congestion = driver_res
         return progs
 
+    def _begin_fleet_workloads(self, counts: list[int],
+                               capacity_priced: bool,
+                               driver_kw: dict) -> list[ReduceProgram]:
+        """Fleet admission: one coupled solve, per-tree capacity claims."""
+        N = self.fleet.n_trees
+        if len(counts) != N or any(c < 1 for c in counts):
+            raise ValueError(f"fleet counts must give >=1 workloads for "
+                             f"each of the {N} trees, got {counts}")
+        if capacity_priced:
+            if "capacity" in driver_kw:
+                raise ValueError("capacity_priced=True supplies the "
+                                 "orchestrator's residual-capacity snapshot; "
+                                 "don't also pass capacity= explicitly")
+            driver_kw = dict(driver_kw, capacity=[
+                r.astype(np.float64) for r in self._residuals])
+        tree_of = [g for g, c in enumerate(counts) for _ in range(c)]
+        snaps = [r > 0 for r in self._residuals]
+        planned, driver_res = plan_fleet(
+            self.fleet, self.cfg.k, counts=counts,
+            avails=[snaps[g] for g in tree_of], **driver_kw)
+        progs: list[ReduceProgram] = []
+        admitted: list[np.ndarray] = []
+        collisions = 0
+        for g, (blue, prog) in zip(tree_of, planned, strict=True):
+            res_g = self._residuals[g]
+            if np.any(blue & (res_g <= 0)):        # capacity collision
+                blue, prog = plan(self.fleet.topos[g], self.cfg.k,
+                                  avail=res_g > 0,
+                                  strategy=self.cfg.strategy)
+                collisions += 1
+            res_g[blue] -= 1                       # this tree's ledger
+            self.utilization_history.append(prog.utilization)
+            progs.append(prog)
+            admitted.append(blue)
+        if collisions:
+            # re-measure against the admitted placements (collision
+            # fallbacks replaced driver ones) — global link-id space,
+            # shared core included, so last_congestion never overstates
+            from ..core.congestion import measure_fleet_multi
+            trees = [tp.tree for tp in self.fleet.topos]
+            loads = [self.fleet.topos[g].load for g in tree_of]
+            has_core = self.fleet.n_core > 0
+            m = measure_fleet_multi(
+                trees, tree_of, loads, admitted,
+                core_rho=self.fleet.core_rho if has_core else None,
+                core_path=self.fleet.core_path if has_core else None,
+                rho_weighted=driver_kw.get("rho_weighted", False))
+            n_big = max(t.n for t in trees)
+            stack = np.zeros((len(admitted), n_big), bool)
+            for t, b in enumerate(admitted):
+                stack[t, : b.size] = b
+            driver_res = dataclasses.replace(
+                driver_res, blue=stack, costs=m.costs, msgs=m.msgs,
+                congestion=m.congestion, max_congestion=m.max_congestion,
+                mean_congestion=m.mean_congestion,
+                core_congestion=m.core_congestion)
+        self.last_congestion = driver_res
+        return progs
+
     # -- telemetry ------------------------------------------------------------
     def preplan_cache_stats(self) -> dict:
         """Preplan-cache telemetry: lookup hits / misses / stale entries,
@@ -553,6 +662,58 @@ class Orchestrator:
         # a real failure replan releases this workload's own claim before
         # re-placing; mirror that, or preplans would see fewer available
         # switches than recovery actually has
+        avail = self._replan_avail()
+        planned = plan_batch(topos, self.cfg.k, [avail] * len(topos),
+                             strategy=self.cfg.strategy)
+        out = []
+        for fp, (blue, prog) in zip(fps, planned):
+            self._preplan_store(fp, blue, prog.utilization, avail)
+            out.append((blue, prog.utilization))
+        return out
+
+    def preplan_link_degrades(
+        self, rate_sets: list[dict[int, float]] | None = None,
+        factor: float = 0.5,
+    ) -> list[tuple[np.ndarray, float]]:
+        """What-if analysis for link-rate degradations.
+
+        By default preplans every currently-undegraded switch's up-link
+        dropping to ``factor`` of its pristine rate, alone — the
+        single-link brownouts that dominate real degradation traffic —
+        in one batched engine call; pass explicit ``rate_sets`` (each a
+        ``{switch: fraction}`` dict, fractions relative to the pristine
+        topology like :meth:`on_link_degrade`) for correlated scenarios.
+        Results are returned as ``[(blue, utilization)]`` and filed in
+        the preplan cache keyed by the post-degrade fingerprint (link
+        rates are already part of every key), so the matching real
+        :meth:`on_link_degrade` recovers with a table lookup instead of
+        a solve — bit-identical to what a fresh solve would place, and
+        subject to the same capacity-drift staleness eviction as
+        :meth:`preplan_failures` / :meth:`preplan_switch_failures`.
+        """
+        n = self.topo0.tree.n
+        if rate_sets is None:
+            if not np.isfinite(factor) or not 0 < factor:
+                raise ValueError(f"rate fraction must be a positive finite "
+                                 f"number, got {factor}")
+            rate_sets = [{int(v): float(factor)} for v in range(n)
+                         if self._link_rate[v] == 1.0]
+        dead_now = sorted(
+            np.nonzero(~self.alive | self.quarantined)[0].tolist())
+        topos, fps = [], []
+        for rates in rate_sets:
+            items = [(int(v), float(f)) for v, f in rates.items()]
+            for v, f in items:
+                if not 0 <= v < n:
+                    raise ValueError(f"switch {v} out of range [0, {n})")
+                if not np.isfinite(f) or f <= 0:
+                    raise ValueError(f"rate fraction for switch {v} must "
+                                     f"be a positive finite number, got {f}")
+            lr = self._link_rate.copy()
+            for v, f in items:
+                lr[v] = f
+            topos.append(self._scenario_topo(dead_now, link_rate=lr))
+            fps.append(self._fingerprint(link_rate=lr))
         avail = self._replan_avail()
         planned = plan_batch(topos, self.cfg.k, [avail] * len(topos),
                              strategy=self.cfg.strategy)

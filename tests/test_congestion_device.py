@@ -107,7 +107,9 @@ def test_driver_rejects_options_kwargs_mix_and_unknown():
         solve_congestion(t, loads, 2, options=EngineOptions(), cap=False)
     with pytest.raises(TypeError, match="did you mean 'use_pallas'"):
         solve_congestion(t, loads, 2, use_palas=True)
-    with pytest.warns(DeprecationWarning, match="EngineOptions"):
+    # the PR-4 kwargs shim is gone: a known field name raises with the
+    # options=EngineOptions(...) migration instead of deprecation-warning
+    with pytest.raises(TypeError, match="EngineOptions"):
         solve_congestion(t, loads, 2, cap=True, max_rounds=2)
 
 
@@ -117,12 +119,13 @@ def test_plan_batch_options_boundary():
         plan_batch([topo], 2, dtyp=np.float32)
     with pytest.raises(TypeError, match="both options="):
         plan_batch([topo], 2, options=EngineOptions(), cap=False)
-    with pytest.warns(DeprecationWarning):
-        legacy = plan_batch([topo], 2, cap=True)
+    with pytest.raises(TypeError, match="EngineOptions"):
+        plan_batch([topo], 2, cap=True)                # shim removed
     with warnings.catch_warnings():
         warnings.simplefilter("error")                 # new spelling: clean
         new = plan_batch([topo], 2, options=EngineOptions(cap=True))
-    assert np.array_equal(legacy[0].blue, new[0].blue)
+    # the options spelling is the default behavior, not a variant path
+    assert np.array_equal(plan_batch([topo], 2)[0].blue, new[0].blue)
     # engine options make no sense for the serial baselines
     with pytest.raises(ValueError, match="only apply to"):
         plan_batch([topo], 2, strategy="top", options=EngineOptions())

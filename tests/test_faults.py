@@ -287,8 +287,11 @@ def test_chaos_scenario_50_events_all_invariants():
     report = ChaosHarness(orch, verify_cache_hits=True).run(events)
     assert report.events == 50
     assert report.invariant_checks == 50
+    # every event recovers via cache or solve, except the two kinds that
+    # legitimately don't replace the placement: no-op recover_quarantined
+    # and preplan_links (cache fills for later degrades)
     assert report.cache_hits + report.replans >= 50 - sum(
-        e.kind == "recover_quarantined" for e in events)
+        e.kind in ("recover_quarantined", "preplan_links") for e in events)
     assert (orch._residual >= 0).all()
 
 

@@ -1,0 +1,322 @@
+"""Fleet-native topology: the multi-tree placement stack.
+
+Covers the N=1 degeneracy contract (a single-tree Fleet must round-trip
+*bit-identically* through ``plan_fleet`` vs ``plan_congestion`` — same
+masks, same costs, same per-round history; the engine path is shared,
+not parallel), cross-tree congestion coupling through shared core links
+(the trade two independent solves cannot make), device/host parity of
+the fleet penalty loop, the global link-id space layout, call-boundary
+validation, and the orchestrator's fleet admission + link-degrade
+preplanning.
+"""
+import numpy as np
+import pytest
+
+from repro.collectives import (Fleet, FleetPlan, TenantPlan, build_fleet,
+                               fleet_tree, plan_congestion, plan_fleet)
+from repro.core.congestion import measure_fleet_multi
+from repro.core.tree import sample_load
+from repro.engine import solve_congestion, solve_fleet
+from repro.runtime import Orchestrator, OrchestratorConfig
+from repro.testing import given, settings, st
+
+
+def _assert_fleet_matches_single(fl, single):
+    """FleetPlan(N=1) vs CongestionPlan: every observable, bitwise."""
+    assert isinstance(fl, FleetPlan)
+    fr, sr = fl.result, single.result
+    assert fr.history == sr.history            # f32 C_max trace, exact
+    assert fr.rounds == sr.rounds
+    assert fr.best_round == sr.best_round
+    assert fr.max_congestion == sr.max_congestion
+    assert fr.baseline_max == sr.baseline_max
+    assert fr.baseline_mean == sr.baseline_mean
+    assert np.array_equal(fr.msgs, sr.msgs)
+    assert np.array_equal(fr.congestion, sr.congestion)
+    for p, q in zip(fl.plans, single.plans, strict=True):
+        assert isinstance(p, TenantPlan)
+        assert np.array_equal(p.blue, q.blue)
+        assert p.cost == q.cost
+    if fr.rounds_log is not None:
+        for r, ((fe, fb), (se, sb)) in enumerate(
+                zip(fr.rounds_log, sr.rounds_log, strict=True)):
+            assert np.array_equal(fe, se), f"rho_eff differs at round {r}"
+            assert np.array_equal(fb, sb), f"masks differ at round {r}"
+
+
+# ---------------------------------------------------------------------------
+# N=1 degeneracy: plan_fleet IS plan_congestion, bit for bit
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.booleans(), st.booleans())
+def test_n1_fleet_round_trips_bit_identically(seed, rho_weighted, dev):
+    """Property: a single-tree Fleet through plan_fleet equals
+    plan_congestion on the topology — masks, costs, round history."""
+    rng = np.random.default_rng(seed)
+    topo = fleet_tree(int(rng.integers(2, 4)), 2, int(rng.integers(2, 4)))
+    T = int(rng.integers(2, 5))
+    k = int(rng.integers(1, 4))
+    kw = dict(max_rounds=3, rho_weighted=rho_weighted, device_loop=dev,
+              record_rounds=True)
+    single = plan_congestion(topo, k, count=T, **kw)
+    fl = plan_fleet(Fleet.single(topo), k, counts=[T], **kw)
+    _assert_fleet_matches_single(fl, single)
+
+
+def test_n1_fleet_parity_with_avail_and_capacity():
+    topo = fleet_tree(2, 2, 4)
+    n = topo.tree.n
+    av = np.ones(n, bool)
+    av[3:6] = False
+    cap = np.full(n, 2.0)
+    kw = dict(max_rounds=4, record_rounds=True, cap_beta=2.0, cap_frac=0.5)
+    single = plan_congestion(topo, 3, count=4, avails=[av] * 4,
+                             capacity=cap, **kw)
+    fl = plan_fleet(Fleet.single(topo), 3, counts=[4], avails=[av] * 4,
+                    capacity=[cap], **kw)
+    _assert_fleet_matches_single(fl, single)
+
+
+# ---------------------------------------------------------------------------
+# cross-tree coupling: the trade independent solves cannot make
+
+
+def test_hot_shared_core_trades_placements_independent_solves_cannot():
+    """Two trees contending on an expensive shared spine: the coupled
+    solve must aggregate root-side to shed core traffic — a placement no
+    per-tree solve_congestion (blind to the core) produces — and must
+    strictly cut the shared-core max congestion."""
+    fleet = build_fleet(2, 2, 2, 2, spine_rho=64.0)
+    trees = [tp.tree for tp in fleet.topos]
+    T_per, k = 4, 2
+    tree_of = [0] * T_per + [1] * T_per
+    loads = [fleet.topos[g].load for g in tree_of]
+
+    coupled = plan_fleet(fleet, k, counts=[T_per, T_per],
+                         rho_weighted=True, max_rounds=6)
+    indep_blues = []
+    for tp in fleet.topos:
+        r = solve_congestion(tp.tree, [tp.load] * T_per, k,
+                             rho_weighted=True, max_rounds=6)
+        indep_blues.extend(np.asarray(r.blue[t]) for t in range(T_per))
+
+    kw = dict(core_rho=fleet.core_rho, core_path=fleet.core_path,
+              rho_weighted=True)
+    m_cpl = measure_fleet_multi(trees, tree_of, loads,
+                                [p.blue for p in coupled.plans], **kw)
+    m_ind = measure_fleet_multi(trees, tree_of, loads, indep_blues, **kw)
+    # strictly less traffic on the shared core...
+    assert m_cpl.core_congestion.max() < m_ind.core_congestion.max()
+    # ...because the placements genuinely differ (the coupled DP sees the
+    # core transit cost on every root-crossing message; the independent
+    # solves cannot)
+    assert any(not np.array_equal(p.blue, b)
+               for p, b in zip(coupled.plans, indep_blues, strict=True))
+
+
+def test_fleet_device_host_bit_parity_with_core():
+    """The riskiest new path: N=2 trees + shared core through the jitted
+    device while-loop vs the host driver — bitwise, round for round."""
+    fleet = build_fleet(2, 2, 2, 2, spine_rho=8.0)
+    trees = [tp.tree for tp in fleet.topos]
+    tree_of = [0, 0, 0, 1, 1]
+    loads = [sample_load(trees[g], "power-law", seed=10 + t)
+             for t, g in enumerate(tree_of)]
+    kw = dict(core_rho=fleet.core_rho, core_path=fleet.core_path,
+              max_rounds=5, record_rounds=True, rho_weighted=True)
+    dev = solve_fleet(trees, loads, tree_of, 2, device_loop=True, **kw)
+    host = solve_fleet(trees, loads, tree_of, 2, device_loop=False, **kw)
+    assert dev.history == host.history
+    assert dev.rounds == host.rounds
+    assert dev.best_round == host.best_round
+    assert np.array_equal(dev.blue, host.blue)
+    assert dev.baseline_max == host.baseline_max
+    assert dev.baseline_mean == host.baseline_mean
+    assert dev.max_congestion == host.max_congestion
+    assert np.array_equal(dev.msgs, host.msgs)
+    assert np.array_equal(dev.congestion, host.congestion)
+    assert np.array_equal(dev.core_congestion, host.core_congestion)
+    assert np.array_equal(dev.tree_of, host.tree_of)
+    for r, ((de, db), (he, hb)) in enumerate(
+            zip(dev.rounds_log, host.rounds_log, strict=True)):
+        assert np.array_equal(de, he), f"rho_eff differs at round {r}"
+        assert np.array_equal(db, hb), f"masks differ at round {r}"
+
+
+def test_global_link_id_space_layout():
+    """Per-link arrays use the fleet's global link-id space: tree
+    segments at link_offsets, shared-core links last."""
+    fleet = build_fleet(2, 2, 2, 2)
+    n0, n1 = (tp.tree.n for tp in fleet.topos)
+    assert fleet.link_offsets == (0, n0)
+    assert fleet.core_offset == n0 + n1
+    assert fleet.n_links == n0 + n1 + fleet.n_core
+    fl = plan_fleet(fleet, 2, counts=[2, 2], max_rounds=2)
+    assert fl.result.congestion.shape == (fleet.n_links,)
+    assert fl.result.core_congestion.shape == (fleet.n_core,)
+    assert np.array_equal(fl.result.congestion[fleet.core_offset:],
+                          fl.result.core_congestion)
+    assert np.array_equal(np.asarray(fl.tree_of), [0, 0, 1, 1])
+    # every tenant's blues live inside its own tree's node range
+    for t, p in enumerate(fl.plans):
+        assert p.blue.shape == (fleet.topos[fl.tree_of[t]].tree.n,)
+
+
+# ---------------------------------------------------------------------------
+# call-boundary validation
+
+
+def test_plan_fleet_validation():
+    topo = fleet_tree(2, 2, 2)
+    single = Fleet.single(topo)
+    pair = build_fleet(2, 2, 2, 2)
+    with pytest.raises(TypeError, match="Fleet.single"):
+        plan_fleet(topo, 2, counts=[1])
+    with pytest.raises(ValueError, match="exactly one of loads / counts"):
+        plan_fleet(single, 2)
+    with pytest.raises(ValueError, match="exactly one of loads / counts"):
+        plan_fleet(single, 2, loads=[topo.load], tree_of=[0], counts=[1])
+    with pytest.raises(ValueError, match="need tree_of"):
+        plan_fleet(single, 2, loads=[topo.load])
+    with pytest.raises(ValueError, match="derived from counts"):
+        plan_fleet(single, 2, counts=[1], tree_of=[0])
+    with pytest.raises(ValueError, match=">=1 tenants"):
+        plan_fleet(pair, 2, counts=[2])            # one count, two trees
+    with pytest.raises(ValueError, match="tree indices"):
+        plan_fleet(single, 2, loads=[topo.load] * 2, tree_of=[0])
+    with pytest.raises(ValueError, match=r"in \[0, 1\)"):
+        plan_fleet(single, 2, loads=[topo.load], tree_of=[1])
+    with pytest.raises(ValueError, match="pairs them positionally"):
+        plan_fleet(single, 2, counts=[2], avails=[None])
+    with pytest.raises(ValueError, match="one per tree"):
+        plan_fleet(pair, 2, counts=[1, 1],
+                   capacity=[np.ones(topo.tree.n)])
+    with pytest.raises(ValueError, match="capacity shape"):
+        plan_fleet(single, 2, counts=[1], capacity=[np.ones(3)])
+
+
+def test_plan_congestion_boundary_validation():
+    topo = fleet_tree(2, 2, 2)
+    with pytest.raises(ValueError, match="pairs them positionally"):
+        plan_congestion(topo, 2, count=3, avails=[None, None])
+    with pytest.raises(ValueError, match="capacity shape"):
+        plan_congestion(topo, 2, count=2, capacity=np.ones(3))
+    with pytest.raises(ValueError, match="finite and"):
+        plan_congestion(topo, 2, count=2,
+                        capacity=np.full(topo.tree.n, np.nan))
+
+
+def test_fleet_dataclass_validation():
+    topo = fleet_tree(2, 2, 2)
+    with pytest.raises(ValueError, match="empty fleet"):
+        Fleet(topos=(), core_rho=np.zeros(0), core_path=())
+    with pytest.raises(ValueError, match="core paths"):
+        Fleet(topos=(topo,), core_rho=np.ones(1), core_path=())
+    with pytest.raises(ValueError, match="out of range"):
+        Fleet(topos=(topo,), core_rho=np.ones(1), core_path=((1,),))
+    with pytest.raises(ValueError, match="repeats a link"):
+        Fleet(topos=(topo,), core_rho=np.ones(1), core_path=((0, 0),))
+    with pytest.raises(ValueError, match="positive"):
+        Fleet(topos=(topo,), core_rho=np.asarray([-1.0]), core_path=((0,),))
+    with pytest.raises(ValueError, match="at least one tree"):
+        build_fleet(0)
+    # uplink_rho gives each tree a dedicated attachment link + the spine
+    fl = build_fleet(2, 2, 2, 2, spine_rho=16.0, uplink_rho=4.0)
+    assert fl.n_core == 3 and fl.core_path == ((0, 2), (1, 2))
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: fleet admission with per-tree capacity ledgers
+
+
+def test_orchestrator_fleet_admission_claims_per_tree():
+    fleet = build_fleet(2, 2, 2, 2)
+    orch = Orchestrator(fleet, OrchestratorConfig(k=2, capacity=3))
+    assert orch._residuals[0] is orch._residual    # tree 0 IS the ledger
+    before = [r.copy() for r in orch._residuals]
+    progs = orch.begin_workloads(congestion_aware=True, fleet=[2, 1])
+    assert len(progs) == 3
+    res = orch.last_congestion
+    assert res is not None
+    assert np.array_equal(np.asarray(res.tree_of), [0, 0, 1])
+    # each tenant claimed against its own tree's ledger, nothing else
+    for g in range(2):
+        rows = [t for t in range(3) if res.tree_of[t] == g]
+        n_g = fleet.topos[g].tree.n
+        claimed = sum(int(res.blue[t, :n_g].sum()) for t in rows)
+        assert int((before[g] - orch._residuals[g]).sum()) == claimed
+        assert (orch._residuals[g] >= 0).all()
+
+
+def test_orchestrator_fleet_admission_validation_and_n1():
+    fleet = build_fleet(2, 2, 2, 2)
+    orch = Orchestrator(fleet, OrchestratorConfig(k=2, capacity=3))
+    with pytest.raises(ValueError, match="congestion_aware=True"):
+        orch.begin_workloads(fleet=[1, 1])
+    with pytest.raises(ValueError, match="exactly one of count / fleet"):
+        orch.begin_workloads(congestion_aware=True)
+    with pytest.raises(ValueError, match="exactly one of count / fleet"):
+        orch.begin_workloads(2, congestion_aware=True, fleet=[1, 1])
+    with pytest.raises(ValueError, match=">=1 workloads"):
+        orch.begin_workloads(congestion_aware=True, fleet=[2])
+    # a plain-topology orchestrator accepts fleet=[c]: the degenerate N=1
+    topo = fleet_tree(2, 2, 2)
+    o1 = Orchestrator(topo, OrchestratorConfig(k=2, capacity=3))
+    progs = o1.begin_workloads(congestion_aware=True, fleet=[2],
+                               capacity_priced=True)
+    assert len(progs) == 2
+    assert (o1._residual >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# preplan_link_degrades: cache-served recovery, bit-identical + staleness
+
+
+def test_preplan_link_degrades_cache_hit_bit_identical():
+    """A link-degrade served from the preplan cache must install the
+    placement a fresh engine solve of that state would produce."""
+    topo = fleet_tree(2, 2, 4)
+    orch = Orchestrator(topo, OrchestratorConfig(k=3, capacity=4))
+    planned = orch.preplan_link_degrades(factor=0.5)
+    assert len(planned) == topo.tree.n         # every pristine up-link
+    replans0, rec0 = orch.replans, orch.cache_recoveries
+    orch.on_link_degrade({5: 0.5})
+    assert orch.replans == replans0            # no engine solve
+    assert orch.cache_recoveries == rec0 + 1
+    cached_blue = orch.blue.copy()
+    cached_util = orch.program.utilization
+    # fresh orchestrator, same degrade, empty cache -> a real solve
+    o2 = Orchestrator(topo, OrchestratorConfig(k=3, capacity=4))
+    o2.on_link_degrade({5: 0.5})
+    assert np.array_equal(cached_blue, o2.blue)
+    assert cached_util == o2.program.utilization
+
+
+def test_preplan_link_degrades_staleness_evicts():
+    """Entries solved under a shifted capacity landscape must be evicted
+    and solved around, exactly like preplan_switch_failures."""
+    topo = fleet_tree(2, 2, 2)
+    orch = Orchestrator(topo, OrchestratorConfig(k=2, capacity=1))
+    orch.preplan_link_degrades(rate_sets=[{4: 0.5}])
+    orch.begin_workload()                      # capacity landscape shifts
+    rec0 = orch.cache_recoveries
+    orch.on_link_degrade({4: 0.5})
+    stats = orch.preplan_cache_stats()
+    assert stats["stale"] == 1
+    assert orch.cache_recoveries == rec0       # solved, not served
+    assert (orch._residual >= 0).all()
+
+
+def test_preplan_link_degrades_validation():
+    topo = fleet_tree(2, 2, 2)
+    orch = Orchestrator(topo, OrchestratorConfig(k=2))
+    with pytest.raises(ValueError, match="out of range"):
+        orch.preplan_link_degrades(rate_sets=[{topo.tree.n: 0.5}])
+    with pytest.raises(ValueError, match="positive finite"):
+        orch.preplan_link_degrades(rate_sets=[{0: 0.0}])
+    with pytest.raises(ValueError, match="positive finite"):
+        orch.preplan_link_degrades(factor=-1.0)
+    # already-degraded links drop out of the default scenario set
+    orch.on_link_degrade({3: 0.5})
+    assert len(orch.preplan_link_degrades()) == topo.tree.n - 1
