@@ -1,0 +1,203 @@
+"""Degraded-mode benchmark: partial-capacity premiums + chaos training.
+
+Two measurements of the execution-layer fault-tolerance path:
+
+  * **partial-capacity premium** — degrade each initially-blue switch to
+    each capacity fraction in ``CAP_FRACS`` and measure the utilization
+    premium of the *instant* no-solve degraded program (the same blue
+    set spilling its overflow one hop up) over the subsequently
+    replanned placement — how much utilization the bounded-regression
+    fallback costs while the replan lands. Acceptance: the mean instant
+    premium stays under ``MAX_MEAN_PREMIUM`` (30%) — degraded mode is a
+    bounded regression, not a cliff. Premiums over the fault-free
+    baseline are reported alongside for context (those include the
+    unavoidable overflow traffic the replan itself pays);
+  * **training under chaos** — a seeded ``>= 50``-event scenario that
+    includes partial-capacity degrade events drives *real* training
+    steps (one per event, tiny model) through
+    :class:`~repro.runtime.ChaosTrainer`, with every harness invariant
+    checked per event and every lossless recovery asserted bit-identical
+    to the fault-free program. Acceptance: zero invariant violations
+    (the harness raises otherwise) and the median non-compile step time
+    under chaos within ``MAX_THROUGHPUT_LOSS`` (25%) of a fault-free run
+    of the same trainer.
+
+Emits ``BENCH_degraded.json`` + a CSV of the per-(switch, fraction)
+premium sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from collections import Counter
+
+import numpy as np
+
+from repro.collectives import fleet_tree
+from repro.runtime import (ChaosHarness, Orchestrator, OrchestratorConfig,
+                           generate_scenario)
+from repro.runtime.faults import CAP_FRACS
+
+from .common import fmt_table, out_path, write_csv
+
+N_PODS = 4
+RACKS = 4
+CHIPS = 4
+K = 6
+CAPACITY = 2
+EVENTS = 50
+SEED = 0
+TRAIN_SEQ = 32
+TRAIN_BATCH = 4
+MAX_MEAN_PREMIUM = 0.30      # acceptance: mean instant premium <= 30%
+MAX_THROUGHPUT_LOSS = 0.25   # acceptance: chaos step time within 25% of ff
+
+
+def _bench_premium(topo, cfg):
+    """Degrade every initially-blue switch at every CAP_FRACS fraction."""
+    base = Orchestrator(topo, cfg)
+    u0 = base.program.utilization
+    rows, instant, vs_base = [], [], []
+    for s in np.nonzero(base.blue)[0]:
+        for f in CAP_FRACS:
+            orch = Orchestrator(topo, cfg)
+            orch.on_switch_degrade({int(s): float(f)})
+            ev = orch.degraded_events[-1]
+            pi = ev["degraded_utilization"] / ev["utilization"] - 1.0
+            pb = ev["utilization"] / u0 - 1.0
+            instant.append(pi)
+            vs_base.append(pb)
+            rows.append([int(s), f, ev["degraded_utilization"],
+                         ev["utilization"], pi, pb])
+    return {
+        "baseline_utilization": u0,
+        "cases": len(rows),
+        "mean_instant_premium": float(np.mean(instant)),
+        "max_instant_premium": float(np.max(instant)),
+        "mean_replanned_vs_baseline": float(np.mean(vs_base)),
+        "max_replanned_vs_baseline": float(np.max(vs_base)),
+    }, rows
+
+
+def _bench_train_chaos(events, seed, seq, batch):
+    """Real training steps under a degrade-heavy chaos scenario."""
+    import jax
+
+    from repro.launch.train import dp_fleet
+    from repro.runtime import ChaosTrainer
+
+    n_dev = jax.device_count()
+    topo = dp_fleet(n_dev)
+    cfg = OrchestratorConfig(k=min(2, topo.tree.n))
+    scenario = generate_scenario(topo, n_events=events, seed=seed, cfg=cfg,
+                                 train=True)
+    kinds = Counter(e.kind for e in scenario)
+    assert kinds["degrade_switch"] > 0, \
+        "scenario must include partial-capacity degrade events"
+
+    # fault-free control: the same trainer, no events — just steps
+    ff = ChaosTrainer(Orchestrator(topo, cfg), seq=seq, global_batch=batch,
+                      seed=seed)
+    for _ in range(events):
+        ff.train_step()
+    ff_sum = ff.summary()
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = ChaosTrainer(Orchestrator(topo, cfg), seq=seq,
+                               global_batch=batch, seed=seed,
+                               ckpt_dir=ckpt_dir)
+        orch = trainer.orch
+        report = ChaosHarness(orch, trainer=trainer).run(scenario)
+    tr = report.train
+    loss_frac = (None if not ff_sum["median_step_seconds"]
+                 else tr["median_step_seconds"]
+                 / ff_sum["median_step_seconds"] - 1.0)
+    return {
+        "devices": n_dev,
+        "events": report.events,
+        "event_kinds": dict(kinds),
+        "invariant_checks": report.invariant_checks,
+        "replans": report.replans,
+        "cache_hits": report.cache_hits,
+        "steps": tr["steps"],
+        "bitwise_checks": tr["bitwise_checks"],
+        "restores": tr["restores"],
+        "compiles": tr["compiles"],
+        "first_loss": tr["first_loss"],
+        "last_loss": tr["last_loss"],
+        "median_step_seconds": tr["median_step_seconds"],
+        "fault_free_median_step_seconds": ff_sum["median_step_seconds"],
+        "throughput_loss": loss_frac,
+    }
+
+
+def run(n_pods: int = N_PODS, racks: int = RACKS, chips: int = CHIPS,
+        k: int = K, capacity: int = CAPACITY, events: int = EVENTS,
+        seed: int = SEED, seq: int = TRAIN_SEQ, batch: int = TRAIN_BATCH,
+        quiet: bool = False):
+    topo = fleet_tree(n_pods, racks, chips)
+    cfg = OrchestratorConfig(k=k, capacity=capacity)
+
+    premium, rows = _bench_premium(topo, cfg)
+    train = _bench_train_chaos(events, seed, seq, batch)
+
+    write_csv("BENCH_degraded.csv",
+              ["switch", "fraction", "degraded_util", "replanned_util",
+               "instant_premium", "replanned_premium"], rows)
+    payload = {
+        "n_pods": n_pods, "racks_per_pod": racks, "chips_per_rack": chips,
+        "k": k, "capacity": capacity, "events": events, "seed": seed,
+        "premium": premium,
+        "train_chaos": train,
+    }
+    with open(out_path("BENCH_degraded.json"), "w") as fh:
+        json.dump(payload, fh, indent=2)
+
+    if not quiet:
+        print(fmt_table(["switch", "frac", "deg_util", "replan_util",
+                         "instant", "vs_base"], rows, max_rows=12))
+        print(f"\ninstant-over-replanned premium: "
+              f"mean {premium['mean_instant_premium']:.1%} "
+              f"max {premium['max_instant_premium']:.1%}; replanned over "
+              f"fault-free phi={premium['baseline_utilization']:.0f}: mean "
+              f"{premium['mean_replanned_vs_baseline']:.1%} "
+              f"({premium['cases']} cases)")
+        print(f"chaos training: {train['events']} events / {train['steps']} "
+              f"steps on {train['devices']} device(s), "
+              f"{train['bitwise_checks']} bitwise checks, "
+              f"{train['restores']} checkpoint restarts, loss "
+              f"{train['first_loss']:.3f} -> {train['last_loss']:.3f}")
+        if train["throughput_loss"] is not None:
+            print(f"step time: {train['median_step_seconds']*1e3:.1f}ms "
+                  f"under chaos vs "
+                  f"{train['fault_free_median_step_seconds']*1e3:.1f}ms "
+                  f"fault-free ({train['throughput_loss']:+.1%})")
+
+    assert premium["mean_instant_premium"] <= MAX_MEAN_PREMIUM, (
+        f"mean instant degraded premium "
+        f"{premium['mean_instant_premium']:.1%} exceeds "
+        f"{MAX_MEAN_PREMIUM:.0%}")
+    assert train["invariant_checks"] == events
+    if train["throughput_loss"] is not None:
+        assert train["throughput_loss"] <= MAX_THROUGHPUT_LOSS, (
+            f"training throughput loss {train['throughput_loss']:.1%} "
+            f"under chaos exceeds {MAX_THROUGHPUT_LOSS:.0%}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=EVENTS)
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--pods", type=int, default=N_PODS)
+    ap.add_argument("--racks", type=int, default=RACKS)
+    ap.add_argument("--k", type=int, default=K)
+    ap.add_argument("--seq", type=int, default=TRAIN_SEQ)
+    args = ap.parse_args(argv)
+    run(n_pods=args.pods, racks=args.racks, k=args.k, events=args.events,
+        seed=args.seed, seq=args.seq)
+
+
+if __name__ == "__main__":
+    main()

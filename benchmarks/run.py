@@ -11,7 +11,7 @@ import argparse
 import sys
 import time
 
-from . import (beyond_bottleneck, beyond_budget, congestion,
+from . import (beyond_bottleneck, beyond_budget, congestion, degraded,
                engine_throughput, fig6_strategies, fig7_online,
                fig8_usecases, fig9_runtime, fig10_scaling, fig11_scalefree,
                fleet, paper_claims, recovery)
@@ -33,6 +33,7 @@ BENCHES = [
     ("beyond_bottleneck (paper §8 conjecture)", beyond_bottleneck.run, {}),
     ("beyond_budget (paper §8 open problem 2)", beyond_budget.run, {}),
     ("recovery (preplan cache + degraded mode + chaos)", recovery.run, {}),
+    ("degraded (partial capacity + chaos training)", degraded.run, {}),
 ]
 
 FAST_OVERRIDES = {
@@ -47,6 +48,7 @@ FAST_OVERRIDES = {
     "congestion (": dict(tenants=(8,), max_rounds=4, reps=1),
     "fleet (": dict(tenants=(8,), max_rounds=4, reps=1),
     "recovery (": dict(n_pods=2, racks=2, events=30),
+    "degraded (": dict(n_pods=2, racks=2, events=25, seq=16),
 }
 
 

@@ -2,8 +2,8 @@ from .schedule import (CongestionPlan, FleetPlan, ReduceProgram, TenantPlan,
                        build_program, plan, plan_batch, plan_congestion,
                        plan_fleet)
 from .topology import (ClusterTopology, Fleet, build_fleet, chip_level_tree,
-                       degrade_links, fail_devices, fail_switches,
-                       fleet_tree)
+                       degrade_links, degrade_switches, fail_devices,
+                       fail_switches, fleet_tree)
 from .tree_allreduce import tree_allreduce, tree_allreduce_tree
 
 __all__ = [
@@ -11,5 +11,6 @@ __all__ = [
     "build_program", "plan", "plan_batch", "plan_congestion", "plan_fleet",
     "ClusterTopology", "Fleet", "build_fleet", "chip_level_tree",
     "fleet_tree", "fail_devices", "fail_switches", "degrade_links",
+    "degrade_switches",
     "tree_allreduce", "tree_allreduce_tree",
 ]

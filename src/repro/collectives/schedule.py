@@ -12,7 +12,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core.reduce import messages_up, phi
+from ..core.reduce import messages_up, messages_up_degraded, phi_degraded
 from ..core import baselines
 from ..engine.options import EngineOptions, resolve_options
 from .topology import ClusterTopology, Fleet
@@ -41,30 +41,77 @@ class PermuteRound:
 @dataclasses.dataclass
 class CompressOp:
     flag: np.ndarray                # (n_dev,) bool: device compresses now
-    width: np.ndarray               # (n_dev,) slots to sum into slot 0
+    width: np.ndarray               # (n_dev,) slots folded into slot 0
+                                    # (strict left fold; slots [1, width)
+                                    # are cleared, slots >= width kept —
+                                    # a degraded switch's raw overflow)
+
+
+@dataclasses.dataclass
+class FoldOp:
+    """Host completion of a degraded child's spilled aggregation.
+
+    The child delivered ``[P', x_m, .., x_{w-1}]`` (its partial fold plus
+    the raw overflow); the parent's home continues the *same* left fold —
+    ``((P' + x_m) + ...) + x_{w-1}`` — writing the completed sum back at
+    the span's first slot. Because P' is the prefix of the fault-free
+    fold, the result is bit-identical to the pristine aggregation.
+    """
+    start: np.ndarray               # (n_dev,) first slot of the span
+    count: np.ndarray               # (n_dev,) slots in the span (0 = idle)
+    span: int                       # static loop bound (max count)
+
+
+@dataclasses.dataclass
+class CompactOp:
+    """Static per-device slot gather: ``buf[i] = buf[src[dev, i]]``.
+
+    ``src[dev, i] == -1`` zero-fills. Restores the *fault-free* slot
+    layout after spilled deliveries were folded (and clears the stale
+    overflow slots), so every op downstream of a degraded level is the
+    byte-for-byte pristine program.
+    """
+    src: np.ndarray                 # (n_dev, n_slots) int32 gather map
 
 
 @dataclasses.dataclass
 class ReduceProgram:
     n_dev: int
     n_slots: int
-    ops: list                       # PermuteRound | CompressOp
+    ops: list                       # PermuteRound | CompressOp | FoldOp
+                                    # | CompactOp
     root_home: int
     root_count: int
     utilization: float              # phi of the underlying placement
-    total_network_messages: int     # logical messages (== sum msgs_up)
+                                    # (phi_degraded under reduced capacity)
+    total_network_messages: int     # logical messages (== sum msgs_up,
+                                    # incl. spilled overflow)
 
 
 def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
     t = topo.tree
     load = topo.load
-    if topo.blocked is not None and np.any(np.asarray(blue, bool)
-                                           & topo.blocked):
+    blue = np.asarray(blue, bool)
+    if topo.blocked is not None and np.any(blue & topo.blocked):
         raise ValueError("blue placement aggregates at a failed switch")
+    scale = (None if topo.cap_scale is None
+             else np.asarray(topo.cap_scale, np.float64))
+    if scale is not None and np.any(blue & (scale <= 0.0)):
+        raise ValueError("blue placement aggregates at a zero-capacity "
+                         "switch")
     if any(load[v] > 0 and len(t.children[v]) > 0 for v in range(t.n)):
         raise ValueError("executor supports leaf-only loads")
     n_dev = topo.n_devices
-    msgs = messages_up(t, load, blue)
+    msgs = messages_up(t, load, blue)      # fault-free out-counts
+
+    # degraded execution: a blue switch at capacity scale a < 1 folds only
+    # the first m = agg_width(w, a) of its w inputs and spills the
+    # o = w - m overflow raw one hop up, where the parent's *host*
+    # completes the same left fold. out_dl is what each switch actually
+    # sends (msgs + its own overflow); everything above a spill carries
+    # the fault-free count again.
+    out_dl = messages_up_degraded(t, load, blue, scale)
+    over = out_dl - msgs
 
     # homes: leaf -> its device; internal -> home of first nonempty child
     home = np.full(t.n, -1, np.int64)
@@ -77,10 +124,9 @@ def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
                 if home[c] >= 0:
                     home[v] = home[c]
                     break
-    # out-counts after aggregation decisions
-    out = msgs  # msgs_up already encodes red forward / blue collapse
 
     ops: list = []
+    compacts: list[tuple[CompactOp, dict]] = []   # pad rows at the end
     n_slots = 1
     # process internal switches level by level (deepest parents first)
     order = [v for v in t.topo[::-1] if t.children[v]]
@@ -96,10 +142,11 @@ def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
                 if ci >= len(kids):
                     continue
                 c = kids[ci]
-                cnt = int(out[c])
+                cnt = int(out_dl[c])
                 if cnt == 0 or home[c] == home[p]:
                     continue
-                off = int(load[p]) + sum(int(out[kids[j]]) for j in range(ci))
+                off = int(load[p]) + sum(int(out_dl[kids[j]])
+                                         for j in range(ci))
                 perm.append((int(home[c]), int(home[p])))
                 roff[home[p]] = off
                 rcnt[home[p]] = cnt
@@ -107,21 +154,88 @@ def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
                 n_slots = max(n_slots, off + cnt)
             if perm:
                 ops.append(PermuteRound(perm, slab, roff, rcnt))
-        # compress at blue parents of this level
+        # host completion of spilled children: fold each degraded child's
+        # [P', overflow...] span in delivery order, then compact back to
+        # the fault-free slot layout so every op above this level is the
+        # byte-for-byte pristine program
+        spans = {}                  # parent -> [(child, dl_off, dl_cnt)]
+        spilled = {}                # parent -> [(dl_off, dl_cnt)]
+        for p in parents:
+            kids = [c for c in t.children[p] if home[c] >= 0]
+            off, sp, spl = int(load[p]), [], []
+            for c in kids:
+                cnt = int(out_dl[c])
+                sp.append((c, off, cnt))
+                if over[c] > 0 and cnt > 0:
+                    spl.append((off, cnt))
+                    n_slots = max(n_slots, off + cnt)
+                off += cnt
+            spans[p] = sp
+            if spl:
+                spilled[p] = spl
+        fold_round = 0
+        while any(fold_round < len(spl) for spl in spilled.values()):
+            start = np.zeros(n_dev, np.int64)
+            count = np.zeros(n_dev, np.int64)
+            for p, spl in spilled.items():
+                if fold_round < len(spl):
+                    off_c, cnt = spl[fold_round]
+                    start[home[p]] = off_c
+                    count[home[p]] = cnt
+            ops.append(FoldOp(start, count, int(count.max())))
+            fold_round += 1
+        if spilled:
+            rows = {}
+            for p in spilled:
+                row = []
+                for i in range(int(load[p])):
+                    row.append(i)
+                for c, dl_off, _ in spans[p]:
+                    # a spilled child collapsed to 1 message at dl_off;
+                    # others map their whole fault-free span
+                    for j in range(int(msgs[c])):
+                        row.append(dl_off + j)
+                rows[int(home[p])] = np.asarray(row, np.int32)
+            op = CompactOp(src=None)
+            compacts.append((op, rows))
+            ops.append(op)
+        # compress at blue parents of this level (fault-free widths; a
+        # degraded parent folds only its first `total - over` inputs)
         flag = np.zeros(n_dev, bool)
         width = np.ones(n_dev, np.int64)
         any_comp = False
+        self_rows = {}
         for p in parents:
             if blue[p] and home[p] >= 0:
                 kids = [c for c in t.children[p] if home[c] >= 0]
-                total = int(load[p]) + sum(int(out[c]) for c in kids)
+                total = int(load[p]) + sum(int(msgs[c]) for c in kids)
                 if total > 1:
+                    m = total - int(over[p])
                     flag[home[p]] = True
-                    width[home[p]] = total
+                    width[home[p]] = m
                     n_slots = max(n_slots, total)
                     any_comp = True
+                    if over[p] > 0:
+                        # [P' at 0, raw x_m..x_{w-1}] -> contiguous
+                        # [P', x_m, ..] for the delivery upward
+                        row = [0] + [m + j for j in range(int(over[p]))]
+                        self_rows[int(home[p])] = np.asarray(row, np.int32)
         if any_comp:
             ops.append(CompressOp(flag, width))
+        if self_rows:
+            op = CompactOp(src=None)
+            compacts.append((op, self_rows))
+            ops.append(op)
+
+    # finalize compact gather maps now that n_slots is known: uninvolved
+    # devices keep an identity row; involved rows zero-fill (-1) past the
+    # mapped extent, clearing stale overflow slots
+    for op, rows in compacts:
+        src = np.tile(np.arange(n_slots, dtype=np.int32), (n_dev, 1))
+        for dev, row in rows.items():
+            src[dev, : len(row)] = row
+            src[dev, len(row):] = -1
+        op.src = src
 
     r = t.root
     return ReduceProgram(
@@ -129,9 +243,9 @@ def build_program(topo: ClusterTopology, blue: np.ndarray) -> ReduceProgram:
         n_slots=n_slots,
         ops=ops,
         root_home=int(home[r]),
-        root_count=int(out[r]),
-        utilization=phi(t, load, blue),
-        total_network_messages=int(msgs.sum()),
+        root_count=int(out_dl[r]),
+        utilization=phi_degraded(t, load, blue, scale),
+        total_network_messages=int(out_dl.sum()),
     )
 
 
@@ -283,8 +397,14 @@ def plan_congestion(topo: ClusterTopology, k: int,
     if driver_kw.get("capacity") is not None:
         driver_kw["capacity"] = _check_capacity(
             driver_kw["capacity"], topo.tree.n, "plan_congestion")
-    if topo.blocked is not None:
-        # blocked switches leave Lambda for every tenant
+        if topo.cap_scale is not None:
+            # partial-capacity degradation shrinks the capacity snapshot
+            # the engine's crowding term prices against: a switch at half
+            # its aggregation plane crowds twice as fast
+            driver_kw["capacity"] = (driver_kw["capacity"]
+                                     * np.clip(topo.cap_scale, 0.0, 1.0))
+    if topo.blocked is not None or topo.cap_scale is not None:
+        # blocked and zero-capacity switches leave Lambda for every tenant
         if avails is None or isinstance(avails, np.ndarray):
             avails = topo.candidates(avails)
         else:
@@ -405,6 +525,8 @@ def plan_fleet(fleet: Fleet, k: int,
                              "— plan_fleet takes one per tree")
         driver_kw["capacity"] = [
             _check_capacity(c, fleet.topos[g].tree.n, "plan_fleet")
+            * (np.clip(fleet.topos[g].cap_scale, 0.0, 1.0)
+               if fleet.topos[g].cap_scale is not None else 1.0)
             for g, c in enumerate(caps)]
     from ..engine import solve_fleet
     res = solve_fleet([tp.tree for tp in fleet.topos], loads, tid, k,

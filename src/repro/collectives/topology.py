@@ -30,6 +30,10 @@ class ClusterTopology:
     blocked: np.ndarray | None = None  # switches whose aggregation plane is
                                        # down (forwarding still works); they
                                        # leave the candidate set Lambda
+    cap_scale: np.ndarray | None = None  # per-switch remaining aggregation-
+                                         # capacity fraction a(s) in [0, 1];
+                                         # None = all pristine. 0 composes
+                                         # with blocked (the frac->0 limit)
 
     @property
     def n_devices(self) -> int:
@@ -40,18 +44,27 @@ class ClusterTopology:
 
         ``avail`` is an optional extra mask (e.g. the orchestrator's
         residual-capacity snapshot); the result is its intersection with
-        the non-blocked switches, or ``None`` when neither constrains.
-        A mask whose shape is not one flag per switch raises here, at the
-        planner boundary, instead of broadcasting somewhere in the engine.
+        the non-blocked switches — and the switches whose aggregation
+        capacity has degraded all the way to zero, which is the same
+        fault expressed continuously — or ``None`` when neither
+        constrains. A mask whose shape is not one flag per switch raises
+        here, at the planner boundary, instead of broadcasting somewhere
+        in the engine.
         """
         if avail is not None:
             avail = np.asarray(avail, bool)
             if avail.shape != (self.tree.n,):
                 raise ValueError(f"avail shape {avail.shape} != "
                                  f"({self.tree.n},) — one flag per switch")
-        if self.blocked is None:
+        cand = None
+        if self.blocked is not None:
+            cand = ~self.blocked
+        if self.cap_scale is not None:
+            dead = np.asarray(self.cap_scale, np.float64) <= 0.0
+            if dead.any():
+                cand = ~dead if cand is None else cand & ~dead
+        if cand is None:
             return avail
-        cand = ~self.blocked
         if avail is None:
             return cand
         return avail & cand
@@ -133,7 +146,7 @@ def fail_devices(topo: ClusterTopology, dead: list[int]) -> ClusterTopology:
         load[device_leaf[d]] -= 1
         device_leaf[d] = -1
     return ClusterTopology(tree=topo.tree, device_leaf=device_leaf, load=load,
-                           blocked=topo.blocked)
+                           blocked=topo.blocked, cap_scale=topo.cap_scale)
 
 
 def fail_switches(topo: ClusterTopology, dead: list[int],
@@ -184,7 +197,7 @@ def fail_switches(topo: ClusterTopology, dead: list[int],
                 dataclasses.replace(topo, blocked=None), gone)
             load, device_leaf = interim.load, interim.device_leaf
     return ClusterTopology(tree=t, device_leaf=device_leaf, load=load,
-                           blocked=blocked)
+                           blocked=blocked, cap_scale=topo.cap_scale)
 
 
 def degrade_links(topo: ClusterTopology,
@@ -210,6 +223,39 @@ def degrade_links(topo: ClusterTopology,
                              f"positive finite number, got {f}")
         rho[v] = rho[v] / f
     return dataclasses.replace(topo, tree=Tree(t.parent, rho))
+
+
+def degrade_switches(topo: ClusterTopology,
+                     scales: dict[int, float]) -> ClusterTopology:
+    """Scale the aggregation capacity a(s) of the given switches.
+
+    ``scales[s]`` in ``[0, 1]`` is the remaining fraction of switch
+    ``s``'s nominal aggregation capacity — the P4COM/SwitchAgg model
+    where a switch's in-network compute is a per-switch *resource* that
+    degrades gradually (memory pressure, partial pipeline loss), not a
+    boolean. Scales compose multiplicatively with an existing
+    ``cap_scale`` (two half-capacity events leave a quarter), mirroring
+    :func:`degrade_links`. The ``frac -> 0`` limit composes with
+    ``blocked`` / :func:`fail_switches`: a zero-capacity switch leaves
+    the candidate set Lambda (see :meth:`ClusterTopology.candidates`)
+    while forwarding keeps working, exactly like a blocked switch.
+
+    Validation is all-before-apply: a bad id or a non-finite / out-of-
+    range fraction raises before any state is built.
+    """
+    t = topo.tree
+    scale = (np.ones(t.n, np.float64) if topo.cap_scale is None
+             else np.asarray(topo.cap_scale, np.float64).copy())
+    items = [(int(s), float(f)) for s, f in scales.items()]
+    for s, f in items:
+        if not 0 <= s < t.n:
+            raise ValueError(f"switch {s} out of range [0, {t.n})")
+        if not np.isfinite(f) or f < 0 or f > 1:
+            raise ValueError(f"capacity scale for switch {s} must be a "
+                             f"finite fraction in [0, 1], got {f}")
+    for s, f in items:
+        scale[s] = scale[s] * f
+    return dataclasses.replace(topo, cap_scale=scale)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,12 +15,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .schedule import CompressOp, PermuteRound, ReduceProgram
+from .schedule import CompactOp, CompressOp, FoldOp, PermuteRound, ReduceProgram
 
 try:  # JAX >= 0.6
     from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _left_fold(buf, start, width, hi):
+    """Strict sequential left fold of ``buf[start : start+width]``.
+
+    Aggregations run as ``((s_0 + s_1) + s_2) + ...`` — a fixed summation
+    order, so a degraded switch's partial fold is a *prefix* of the
+    fault-free fold and the parent-side completion (:class:`FoldOp`)
+    reproduces the pristine sum bit-for-bit. ``hi`` is the static loop
+    bound; slots past ``width`` contribute exact zeros.
+    """
+    n = buf.shape[0]
+    init = jnp.take(buf, jnp.clip(start, 0, n - 1), axis=0)
+
+    def body(j, acc):
+        slot = jnp.take(buf, jnp.clip(start + j, 0, n - 1), axis=0)
+        return acc + jnp.where(j < width, slot, 0)
+
+    return jax.lax.fori_loop(1, max(hi, 1), body, init)
 
 
 def _apply_program(x, prog: ReduceProgram, axis: str):
@@ -29,26 +48,41 @@ def _apply_program(x, prog: ReduceProgram, axis: str):
     d = x.shape[-1]
     dev = jax.lax.axis_index(axis)
     buf = jnp.zeros((prog.n_slots, d), x.dtype).at[0].set(x)
+    sl = jnp.arange(prog.n_slots)
     for op in prog.ops:
         if isinstance(op, PermuteRound):
             sent = buf[: op.slab]
             recv = jax.lax.ppermute(sent, axis, op.perm)
             off = jnp.asarray(op.recv_offset)[dev]
             cnt = jnp.asarray(op.recv_count)[dev]
-            sl = jnp.arange(op.slab)
-            mask = (sl < cnt)[:, None]
-            idx = jnp.clip(off + sl, 0, prog.n_slots - 1)
+            rsl = jnp.arange(op.slab)
+            mask = (rsl < cnt)[:, None]
+            idx = jnp.clip(off + rsl, 0, prog.n_slots - 1)
             buf = buf.at[idx].add(jnp.where(mask, recv, 0))
-        else:  # CompressOp
+        elif isinstance(op, CompressOp):
             flag = jnp.asarray(op.flag)[dev]
             width = jnp.asarray(op.width)[dev]
-            summask = (jnp.arange(prog.n_slots) < width)[:, None]
-            s = (buf * summask.astype(buf.dtype)).sum(0)
-            compressed = jnp.zeros_like(buf).at[0].set(s)
-            buf = jnp.where(flag, compressed, buf)
-    # destination d: aggregate the root's outgoing messages, broadcast back
-    rootmask = (jnp.arange(prog.n_slots) < prog.root_count)[:, None]
-    local = (buf * rootmask.astype(buf.dtype)).sum(0)
+            s = _left_fold(buf, 0, width, prog.n_slots)
+            # fold lands in slot 0, slots [1, width) clear; slots >= width
+            # keep a degraded switch's raw overflow for the spill upward
+            folded = jnp.where((sl == 0)[:, None], s[None, :],
+                               jnp.where((sl < width)[:, None], 0, buf))
+            buf = jnp.where(flag, folded, buf)
+        elif isinstance(op, FoldOp):
+            start = jnp.asarray(op.start)[dev]
+            cnt = jnp.asarray(op.count)[dev]
+            # continue the child's fold: acc starts at its partial P'.
+            # Idle devices (cnt == 0) keep their buffer bitwise untouched.
+            acc = _left_fold(buf, start, cnt, op.span)
+            buf = jnp.where(cnt > 0, buf.at[start].set(acc), buf)
+        else:  # CompactOp: static gather back to the fault-free layout
+            idx = jnp.asarray(op.src)[dev]
+            gathered = jnp.take(buf, jnp.clip(idx, 0, prog.n_slots - 1),
+                                axis=0)
+            buf = jnp.where((idx >= 0)[:, None], gathered, 0)
+    # destination d: aggregate the root's outgoing messages (same strict
+    # left fold — completing a degraded root's spill), broadcast back
+    local = _left_fold(buf, 0, prog.root_count, prog.root_count)
     local = jnp.where(dev == prog.root_home, local, 0)
     return jax.lax.psum(local, axis)
 

@@ -102,6 +102,25 @@ def make_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig, mesh, prog,
     return step
 
 
+def mask_dead_batch(batch, alive, global_batch: int, n_dev: int):
+    """Zero the batch shards of non-contributing devices.
+
+    Dead/quarantined chips produce no gradient messages; their slice of
+    the global batch is zeroed (a zero contribution to the sum) and the
+    orchestrator's ``grad_scale`` re-normalizes the mean over survivors.
+    """
+    dead = np.nonzero(~np.asarray(alive, bool))[0]
+    if not len(dead):
+        return batch
+    per = global_batch // n_dev
+    mask = np.ones(global_batch, bool)
+    for d in dead:
+        mask[d * per:(d + 1) * per] = False
+    m = jnp.asarray(mask)
+    return {k: jnp.where(m[:, None] if v.ndim > 1 else m, v, 0)
+            for k, v in batch.items()}
+
+
 def parse_failures(spec: str | None) -> dict[int, list[int]]:
     """--fail "30:0,1;60:5" -> {30: [0, 1], 60: [5]}."""
     out: dict[int, list[int]] = {}
@@ -203,16 +222,8 @@ def main(argv=None):
         if n_dev > 1:
             batch = jax.tree.map(
                 lambda x: jax.device_put(x, batch_sharding), batch)
-            # zero out shards of failed devices (they produce nothing)
-            dead = np.nonzero(~orch.alive)[0]
-            if len(dead):
-                per = args.global_batch // n_dev
-                mask = np.ones(args.global_batch, bool)
-                for d in dead:
-                    mask[d * per:(d + 1) * per] = False
-                batch = {k: jnp.where(
-                    jnp.asarray(mask)[:, None] if v.ndim > 1
-                    else jnp.asarray(mask), v, 0) for k, v in batch.items()}
+            batch = mask_dead_batch(batch, orch.alive, args.global_batch,
+                                    n_dev)
         params, opt_state, ef, metrics = step_fn(params, opt_state, ef,
                                                  batch)
         loss = float(metrics["loss"])

@@ -1,10 +1,11 @@
 from .orchestrator import Orchestrator, OrchestratorConfig
 from .stragglers import StragglerPolicy, StragglerReport
 from .elastic import fleet_dims, rescale, scaling_budget
-from .faults import (ChaosHarness, ChaosReport, FaultEvent,
-                     InvariantViolation, generate_scenario)
+from .faults import (ChaosHarness, ChaosReport, ChaosTrainer,
+                     FaultEvent, InvariantViolation,
+                     generate_scenario)
 
 __all__ = ["Orchestrator", "OrchestratorConfig", "StragglerPolicy",
            "StragglerReport", "fleet_dims", "rescale", "scaling_budget",
-           "ChaosHarness", "ChaosReport", "FaultEvent",
+           "ChaosHarness", "ChaosReport", "ChaosTrainer", "FaultEvent",
            "InvariantViolation", "generate_scenario"]

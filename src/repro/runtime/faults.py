@@ -14,8 +14,10 @@ event:
   * the blue budget is respected and no blue sits on a blocked switch;
   * per-switch capacity residuals never go negative, and the claim
     ledger balances (capacity handed out == blue claims live);
-  * the installed program's utilization equals ``phi`` recomputed from
-    the current topology and mask — the program is never stale;
+  * the installed program's utilization equals ``phi_degraded``
+    recomputed from the current topology, mask, and per-switch capacity
+    scales — the program is never stale, and never aggregates on a
+    zero-capacity plane;
   * whenever a recovery was served from the preplan cache, a fresh
     engine solve of the same scenario must reproduce the cached
     placement bit-for-bit (the cache can be fast, never wrong);
@@ -32,16 +34,19 @@ import time
 
 import numpy as np
 
-from ..collectives.schedule import plan
-from ..core.reduce import phi
+from ..collectives.schedule import build_program, plan
+from ..core.reduce import phi_degraded
 from .orchestrator import Orchestrator, OrchestratorConfig
 
 KINDS = ("fail_device", "recover_device", "fail_switch", "recover_switch",
          "degrade_link", "recover_link", "straggler_storm",
          "recover_quarantined", "fail_rack", "admit_workloads",
-         "preplan_links")
+         "preplan_links", "degrade_switch", "recover_switch_capacity",
+         "crash")
 
 DEGRADE_FACTORS = (0.5, 0.25, 0.125)
+# partial aggregation-capacity loss fractions for degrade_switch events
+CAP_FRACS = (0.75, 0.5, 0.25)
 
 
 class InvariantViolation(AssertionError):
@@ -70,6 +75,7 @@ class ChaosReport:
     stale: int                # cache entries evicted for capacity drift
     invariant_checks: int
     seconds: float
+    train: dict | None = None  # ChaosTrainer summary when training-coupled
 
     @property
     def events_per_sec(self) -> float:
@@ -86,18 +92,22 @@ def _storm_limit(n_alive: int, quantile: float) -> int:
 def generate_scenario(topo, n_events: int = 50, seed: int = 0,
                       cfg: OrchestratorConfig | None = None,
                       admits: bool = False,
-                      min_healthy: int | None = None) -> list[FaultEvent]:
+                      min_healthy: int | None = None,
+                      train: bool = False) -> list[FaultEvent]:
     """Derive a deterministic, feasibility-checked event sequence.
 
     Mirrors the orchestrator's health state (failed / quarantined devices,
-    blocked switches, degraded links) while sampling, so every emitted
-    event is valid when it arrives: no double-failures, the fleet never
-    drops below ``min_healthy`` live devices (default ``max(2, n/4)``), at
-    most half the switches are ever blocked, and straggler storms are
-    sized so the deadline math *guarantees* the slow devices get
-    quarantined (slow count <= ``(alive-1) * (1-quantile)``, exactly
-    ``patience`` observed steps). The same ``(topo, n_events, seed, cfg)``
-    always yields the same list.
+    blocked switches, degraded links, partially-degraded aggregation
+    planes) while sampling, so every emitted event is valid when it
+    arrives: no double-failures, the fleet never drops below
+    ``min_healthy`` live devices (default ``max(2, n/4)``), at most half
+    the switches are ever blocked, and straggler storms are sized so the
+    deadline math *guarantees* the slow devices get quarantined (slow
+    count <= ``(alive-1) * (1-quantile)``, exactly ``patience`` observed
+    steps). ``train=True`` additionally mixes in ``crash`` events —
+    process loss that only a :class:`ChaosTrainer` (checkpoint restart)
+    can absorb. The same ``(topo, n_events, seed, cfg, train)`` always
+    yields the same list.
     """
     cfg = cfg or OrchestratorConfig()
     rng = np.random.default_rng(seed)
@@ -113,6 +123,7 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
     quarantined: set[int] = set()
     blocked: set[int] = set()
     degraded: dict[int, float] = {}
+    cap_degraded: dict[int, float] = {}   # partially-degraded agg planes
     # link-degrade what-ifs the stream has preplanned; later degrade_link
     # events preferentially replay them, exercising the cache-served
     # recovery path (preplan_link_degrades -> on_link_degrade lookup)
@@ -139,6 +150,14 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
             menu.append(("recover_link", 2.0))
         if len(degraded) < n_sw:
             menu.append(("preplan_links", 1.0))
+        cap_ok = [v for v in range(n_sw)
+                  if v not in cap_degraded and v not in blocked]
+        if cap_ok:
+            menu.append(("degrade_switch", 2.0))
+        if cap_degraded:
+            menu.append(("recover_switch_capacity", 2.0))
+        if train:
+            menu.append(("crash", 0.5))
         storm_cap = min(_storm_limit(len(alive), cfg.straggler_quantile),
                         len(alive) - min_healthy)
         if storm_cap >= 1:
@@ -200,6 +219,18 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
             v = int(rng.choice(sorted(degraded)))
             del degraded[v]
             events.append(FaultEvent("recover_link", rates=((v, 1.0),)))
+        elif kind == "degrade_switch":
+            s = int(rng.choice(cap_ok))
+            f = float(rng.choice(CAP_FRACS))
+            cap_degraded[s] = f
+            events.append(FaultEvent("degrade_switch", rates=((s, f),)))
+        elif kind == "recover_switch_capacity":
+            s = int(rng.choice(sorted(cap_degraded)))
+            del cap_degraded[s]
+            events.append(FaultEvent("recover_switch_capacity",
+                                     rates=((s, 1.0),)))
+        elif kind == "crash":
+            events.append(FaultEvent("crash"))
         elif kind == "straggler_storm":
             m = int(rng.integers(1, storm_cap + 1))
             devs = rng.choice(alive, size=m, replace=False)
@@ -239,11 +270,21 @@ class ChaosHarness:
     ``verify_cache_hits=True`` (the default, and the expensive part) runs
     a fresh engine solve after every cache-served recovery and requires
     the placement to match the cached one bit-for-bit.
+
+    Pass a :class:`ChaosTrainer` as ``trainer`` to drive a *real*
+    training step after every event (training-coupled chaos): events
+    that neither removed a contributing device nor moved the blue
+    placement are **lossless** and the step's result must be bit-identical
+    to the fault-free program's — the executor's degraded-mode spill is
+    exact, not approximate. ``crash`` events restart the trainer from
+    its latest checkpoint; without a trainer they are no-ops.
     """
 
-    def __init__(self, orch: Orchestrator, verify_cache_hits: bool = True):
+    def __init__(self, orch: Orchestrator, verify_cache_hits: bool = True,
+                 trainer: "ChaosTrainer | None" = None):
         self.orch = orch
         self.verify_cache_hits = verify_cache_hits
+        self.trainer = trainer
         self.invariant_checks = 0
         # the observable capacity ledger: whatever is unclaimed now plus
         # this workload's own claim. Extra admissions are tracked as they
@@ -260,6 +301,8 @@ class ChaosHarness:
         """Apply one event, then re-check every invariant."""
         o = self.orch
         hits0 = o._preplan_stats["hits"]
+        pre_contrib = (o.alive & ~o.quarantined).copy()
+        pre_blue = None if o.blue is None else o.blue.copy()
         if ev.kind == "fail_device":
             o.on_failure(list(ev.devices))
         elif ev.kind == "recover_device":
@@ -292,17 +335,35 @@ class ChaosHarness:
             before = int(o._residual.sum())
             o.begin_workloads(ev.count)
             self._extra_claims += before - int(o._residual.sum())
+        elif ev.kind in ("degrade_switch", "recover_switch_capacity"):
+            o.on_switch_degrade(dict(ev.rates))
+            rec = o.degraded_events[-1]
+            if self._capacity_total is not None:
+                # the observable capacity pool shrank/grew with the plane,
+                # and evicted foreign claims leave the admitted ledger
+                self._capacity_total += rec["capacity_delta"]
+                self._extra_claims -= rec["evicted_foreign"]
+        elif ev.kind == "crash":
+            pass  # orchestrator state survives; the trainer restarts below
         else:
             raise ValueError(f"unknown event kind {ev.kind!r}")
         cache_hit = o._preplan_stats["hits"] > hits0
         self.check_invariants(cache_hit=cache_hit, event=ev)
-        return {
+        record = {
             "kind": ev.kind,
             "utilization": o.program.utilization,
             "cache_hit": cache_hit,
             "n_alive": o.n_alive,
             "replans": o.replans,
         }
+        if self.trainer is not None:
+            lossless = (ev.kind != "crash" and pre_blue is not None
+                        and o.blue is not None
+                        and np.array_equal(pre_contrib,
+                                           o.alive & ~o.quarantined)
+                        and np.array_equal(pre_blue, o.blue))
+            record.update(self.trainer.after_event(ev, lossless=lossless))
+        return record
 
     # -- invariants -----------------------------------------------------------
     def check_invariants(self, cache_hit: bool = False,
@@ -319,6 +380,9 @@ class ChaosHarness:
                  f"blue count {int(o.blue.sum())} exceeds budget {o.cfg.k}")
         _require(not np.any(o.blue & o.switch_blocked),
                  "blue placement on a blocked switch")
+        if o.topo.cap_scale is not None:
+            _require(not np.any(o.blue & (o.topo.cap_scale <= 0)),
+                     "blue placement on a zero-capacity switch")
         if o._residual is not None:
             _require(bool((o._residual >= 0).all()),
                      f"negative capacity residual "
@@ -329,7 +393,8 @@ class ChaosHarness:
                      f"claim ledger imbalance: {handed_out} capacity "
                      f"claimed vs {int(o.blue.sum())} blue + "
                      f"{self._extra_claims} admitted")
-        fresh_util = phi(o.topo.tree, o.topo.load, o.blue)
+        fresh_util = phi_degraded(o.topo.tree, o.topo.load, o.blue,
+                                  o.topo.cap_scale)
         _require(o.program.utilization == fresh_util,
                  f"program utilization {o.program.utilization} != "
                  f"phi of current placement {fresh_util}")
@@ -359,4 +424,252 @@ class ChaosHarness:
             stale=o._preplan_stats["stale"],
             invariant_checks=self.invariant_checks,
             seconds=dt,
+            train=None if self.trainer is None else self.trainer.summary(),
         )
+
+
+class ChaosTrainer:
+    """Real training steps interleaved with chaos events.
+
+    Couples the chaos harness to the end-to-end driver: a tiny model
+    trains with the orchestrator's *live* SOAR reduction program, one
+    step per event, so recovery claims are checked against actual
+    gradient arithmetic rather than cost accounting alone:
+
+      * **lossless events** (no contributing device lost, blue placement
+        unchanged — e.g. partial capacity degrades, link degrades) must
+        leave the step *bit-identical* to the fault-free program's: the
+        step runs twice from the same state, once under the installed
+        (possibly degraded/spilling) program and once under the pristine
+        ``cap_scale=None`` program, and every parameter, optimizer slot
+        and the loss must match bitwise (the strict-left-fold spill
+        construction is exact, not approximate);
+      * **crash events** restart from the latest checkpoint, asserting
+        the restored state is bitwise what was saved, and rewinding the
+        step counter — the unrecoverable-event path.
+
+    JAX is imported lazily (constructing a trainer is opt-in; the rest
+    of this module stays importable without it). The orchestrator must
+    be built over a topology whose device count matches
+    ``jax.device_count()`` — use :func:`repro.launch.train.dp_fleet`.
+    Step functions are cached by (load, blue, cap-scale, grad-scale), so
+    revisited program states pay no recompile; per-step wall times are
+    recorded with a ``compiled`` flag so throughput stats can exclude
+    compile steps.
+    """
+
+    def __init__(self, orch: Orchestrator, arch: str = "qwen3-32b",
+                 seq: int = 32, global_batch: int | None = None,
+                 ckpt_dir: str | None = None, ckpt_every: int = 5,
+                 seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..checkpoint import ckpt as _ckpt
+        from ..configs import ARCHS
+        from ..data.pipeline import DataConfig, SyntheticLM
+        from ..models import api
+        from ..optim import adamw
+        from ..optim.compression import (CompressionConfig,
+                                         init_error_feedback)
+
+        self.orch = orch
+        n_dev = orch.topo0.n_devices
+        if n_dev != jax.device_count():
+            raise ValueError(
+                f"orchestrator topology has {n_dev} devices but JAX sees "
+                f"{jax.device_count()}; build the orchestrator over "
+                f"dp_fleet(jax.device_count())")
+        self.n_dev = n_dev
+        self.cfg = ARCHS[arch].reduced()
+        self.ocfg = adamw.AdamWConfig()
+        self.ccfg = CompressionConfig()
+        self.mesh = jax.make_mesh((n_dev,), ("data",))
+        self.global_batch = global_batch or max(4, n_dev)
+        if self.global_batch % n_dev:
+            raise ValueError(f"global_batch {self.global_batch} not "
+                             f"divisible by {n_dev} devices")
+        self.seq = seq
+        self.data = SyntheticLM(self.cfg,
+                                DataConfig(self.global_batch, seq,
+                                           seed=seed))
+        self.params = api.init_fn(self.cfg)(jax.random.PRNGKey(seed))
+        self.opt_state = adamw.init(self.params, self.ocfg)
+        if n_dev > 1:
+            ef = jax.tree.map(
+                lambda p: jnp.zeros((n_dev,) + p.shape, jnp.float32),
+                self.params)
+            self.ef = jax.device_put(ef, NamedSharding(self.mesh,
+                                                       P("data")))
+            self._batch_sharding = NamedSharding(self.mesh, P("data"))
+        else:
+            self.ef = init_error_feedback(self.params)
+            self._batch_sharding = None
+        self.step_no = 0
+        self.steps_run = 0      # executed steps; unlike step_no, never rewinds
+        self.losses: list[float] = []
+        self.step_times: list[tuple[float, bool]] = []  # (secs, compiled)
+        self.bitwise_checks = 0
+        self.restores = 0
+        self._step_fns: dict[tuple, object] = {}
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        self._ckpt = _ckpt
+        self._saved: dict | None = None
+        if ckpt_dir is not None:
+            # synchronous saves: a crash may arrive on the very next event
+            self.mgr = _ckpt.CheckpointManager(ckpt_dir, async_save=False)
+            self._save()
+        else:
+            self.mgr = None
+
+    # -- checkpointing --------------------------------------------------------
+    def _state(self) -> dict:
+        return {"params": self.params, "opt": self.opt_state}
+
+    def _save(self) -> None:
+        import jax
+        self.mgr.save(self.step_no, self._state())
+        self._saved = {"step": self.step_no,
+                       "state": jax.device_get(self._state())}
+
+    def crash_restore(self) -> None:
+        """Process loss: rebuild training state from the latest checkpoint.
+
+        Asserts the restored pytree is *bitwise* the one that was saved
+        (checkpoint integrity), then rewinds the step counter so the data
+        pipeline replays the same batches.
+        """
+        if self.mgr is None:
+            raise InvariantViolation(
+                "crash event without a checkpoint directory")
+        state, step = self._ckpt.restore(self.ckpt_dir, self._state())
+        if self._saved is not None:
+            _assert_trees_bitwise(
+                state, self._saved["state"],
+                what=f"checkpoint restore at step {step}")
+            if step != self._saved["step"]:
+                raise InvariantViolation(
+                    f"restored step {step} != last saved "
+                    f"{self._saved['step']}")
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step_no = int(step)
+        del self.losses[self.step_no:]
+        self.restores += 1
+
+    # -- stepping -------------------------------------------------------------
+    def _step_fn(self, program, grad_scale: float, pristine: bool = False):
+        """make_step, cached by everything the compiled fn closes over.
+
+        ``pristine`` marks the fault-free reference program (built with
+        ``cap_scale=None``); when no degrade is active it shares the
+        live program's cache entry, so the bitwise check costs no extra
+        compile.
+        """
+        o = self.orch
+        scale_key = (b"" if pristine or o.topo.cap_scale is None
+                     else np.asarray(o.topo.cap_scale).tobytes())
+        key = (o.topo.load.tobytes(),
+               b"" if o.blue is None else o.blue.tobytes(),
+               scale_key, float(grad_scale))
+        fresh = key not in self._step_fns
+        if fresh:
+            from ..launch.train import make_step
+            self._step_fns[key] = make_step(self.cfg, self.ocfg, self.mesh,
+                                            program, grad_scale, self.ccfg)
+        return self._step_fns[key], fresh
+
+    def _run(self, fn, batch):
+        import jax
+        out = fn(self.params, self.opt_state, self.ef, batch)
+        jax.block_until_ready(out)
+        return out
+
+    def train_step(self, check_bitwise: bool = False) -> dict:
+        """One optimizer step with the orchestrator's current program.
+
+        With ``check_bitwise`` the same state also steps through the
+        fault-free (``cap_scale=None``) program and the two results must
+        agree bit-for-bit.
+        """
+        import jax
+        from ..launch.train import mask_dead_batch
+
+        o = self.orch
+        batch = self.data.batch(self.step_no)
+        if self.n_dev > 1:
+            batch = jax.tree.map(
+                lambda x: jax.device_put(x, self._batch_sharding), batch)
+            batch = mask_dead_batch(batch, o.alive & ~o.quarantined,
+                                    self.global_batch, self.n_dev)
+        fn, fresh = self._step_fn(o.program, o.grad_scale)
+        if check_bitwise:
+            ref_prog = build_program(
+                dataclasses.replace(o.topo, cap_scale=None), o.blue)
+            ref_fn, ref_fresh = self._step_fn(ref_prog, o.grad_scale,
+                                              pristine=True)
+            fresh = fresh or ref_fresh
+            ref = self._run(ref_fn, batch)
+        t0 = time.perf_counter()
+        out = self._run(fn, batch)
+        dt = time.perf_counter() - t0
+        params, opt_state, ef, metrics = out
+        if check_bitwise:
+            _assert_trees_bitwise(
+                {"params": params, "opt": opt_state,
+                 "loss": metrics["loss"]},
+                {"params": ref[0], "opt": ref[1], "loss": ref[3]["loss"]},
+                what=f"lossless step {self.step_no} vs fault-free program")
+            self.bitwise_checks += 1
+        self.params, self.opt_state, self.ef = params, opt_state, ef
+        loss = float(metrics["loss"])
+        self.losses.append(loss)
+        self.step_times.append((dt, fresh))
+        self.step_no += 1
+        self.steps_run += 1
+        if self.mgr is not None and self.step_no % self.ckpt_every == 0:
+            self._save()
+        return {"loss": loss, "step": self.step_no,
+                "step_seconds": dt, "compiled": fresh,
+                "bitwise_checked": bool(check_bitwise)}
+
+    def after_event(self, ev: FaultEvent, lossless: bool = False) -> dict:
+        """Harness hook: absorb the event, then take one training step."""
+        if ev.kind == "crash":
+            self.crash_restore()
+            info = self.train_step(check_bitwise=False)
+            info["restored"] = True
+            return info
+        return self.train_step(check_bitwise=lossless)
+
+    def summary(self) -> dict:
+        times = [t for t, compiled in self.step_times if not compiled]
+        return {
+            "steps": self.steps_run,
+            "first_loss": self.losses[0] if self.losses else None,
+            "last_loss": self.losses[-1] if self.losses else None,
+            "bitwise_checks": self.bitwise_checks,
+            "restores": self.restores,
+            "compiles": sum(1 for _, c in self.step_times if c),
+            "median_step_seconds": (float(np.median(times)) if times
+                                    else None),
+        }
+
+
+def _assert_trees_bitwise(got, want, what: str) -> None:
+    """Raise InvariantViolation unless two pytrees match bit-for-bit."""
+    import jax
+
+    got_l, got_t = jax.tree.flatten(jax.device_get(got))
+    want_l, want_t = jax.tree.flatten(jax.device_get(want))
+    if got_t != want_t:
+        raise InvariantViolation(f"{what}: tree structure differs")
+    for i, (a, b) in enumerate(zip(got_l, want_l)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape or a.dtype != b.dtype or \
+                a.tobytes() != b.tobytes():
+            raise InvariantViolation(
+                f"{what}: leaf {i} differs "
+                f"(shape {a.shape} dtype {a.dtype}; max abs diff "
+                f"{np.max(np.abs(a.astype(np.float64) - b.astype(np.float64))) if a.shape == b.shape else 'n/a'})")

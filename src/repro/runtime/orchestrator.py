@@ -38,8 +38,19 @@ import numpy as np
 from ..collectives.schedule import (ReduceProgram, build_program, plan,
                                     plan_batch, plan_congestion, plan_fleet)
 from ..collectives.topology import (ClusterTopology, Fleet, degrade_links,
-                                    fail_devices)
+                                    degrade_switches, fail_devices)
 from .stragglers import StragglerPolicy, StragglerReport
+
+
+def _switch_id(v, n: int, what: str = "switch") -> int:
+    """Validate a switch id: integral and in range. ``2.7`` raises instead
+    of silently truncating to switch 2."""
+    iv = int(v)
+    if float(v) != iv:
+        raise ValueError(f"{what} id {v!r} is not an integer")
+    if not 0 <= iv < n:
+        raise ValueError(f"{what} {iv} out of range [0, {n})")
+    return iv
 
 
 @dataclasses.dataclass
@@ -73,6 +84,8 @@ class Orchestrator:
         self.quarantined = np.zeros(topo.n_devices, bool)
         self.switch_blocked = np.zeros(n, bool)   # dead aggregation planes
         self._link_rate = np.ones(n)              # up-link rate fraction
+        self._switch_scale = np.ones(n)           # aggregation-capacity
+                                                  # fraction vs pristine
         # residual aggregation capacity (None = unbounded); one ledger per
         # fleet tree — index 0 IS self._residual (same array object)
         self._residual = (np.full(n, cfg.capacity, np.int64)
@@ -131,20 +144,22 @@ class Orchestrator:
     def _fingerprint(self, dead: tuple | None = None,
                      blocked: tuple | None = None,
                      link_rate: np.ndarray | None = None,
+                     cap_scale: np.ndarray | None = None,
                      tree: int = 0) -> tuple:
         """Hashable key of everything the placement solve depends on:
         the fleet tree id, dead devices, blocked switches, link rates
-        (current, or a what-if override), the shared-core rates, budget,
-        strategy, and the topology epoch (rescales invalidate
-        everything)."""
+        (current, or a what-if override), per-switch capacity scales,
+        the shared-core rates, budget, strategy, and the topology epoch
+        (rescales invalidate everything)."""
         if dead is None:
             dead = tuple(
                 np.nonzero(~self.alive | self.quarantined)[0].tolist())
         if blocked is None:
             blocked = tuple(np.nonzero(self.switch_blocked)[0].tolist())
         lr = self._link_rate if link_rate is None else link_rate
+        cs = self._switch_scale if cap_scale is None else cap_scale
         return (self._topo_epoch, int(tree), dead, blocked, lr.tobytes(),
-                self._core_key, self.cfg.k, self.cfg.strategy)
+                cs.tobytes(), self._core_key, self.cfg.k, self.cfg.strategy)
 
     def _preplan_store(self, fp: tuple, blue: np.ndarray, util: float,
                        avail: np.ndarray | None) -> None:
@@ -224,6 +239,11 @@ class Orchestrator:
             topo = degrade_links(
                 topo, {int(v): float(f)
                        for v, f in enumerate(lr) if f != 1.0})
+        if (self._switch_scale != 1.0).any():
+            topo = degrade_switches(
+                topo, {int(v): float(f)
+                       for v, f in enumerate(self._switch_scale)
+                       if f != 1.0})
         if self.switch_blocked.any():
             topo = dataclasses.replace(topo,
                                        blocked=self.switch_blocked.copy())
@@ -323,6 +343,105 @@ class Orchestrator:
         self._recover()
         return self.program
 
+    def _effective_capacity(self, scale: float) -> int:
+        """Integer capacity units a switch at ``scale`` still offers."""
+        return int(np.floor(self.cfg.capacity * float(scale) + 1e-9))
+
+    def on_switch_degrade(self, scales: dict[int, float]) -> ReduceProgram:
+        """Partial aggregation-capacity loss: a(s) shrinks, not to zero.
+
+        ``scales[s]`` is the remaining capacity fraction of switch ``s``
+        relative to the *pristine* topology (like :meth:`on_link_degrade`
+        semantics: 0.5 = half the aggregation plane left, 1.0 = fully
+        recovered; the P4COM/SwitchAgg model where in-network compute is
+        a gradually-lost resource). Values are validated — finite, in
+        ``[0, 1]``, integral known switch ids — before any state mutates.
+
+        Two-stage recovery, mirroring :meth:`on_switch_failure`:
+
+        1. **degraded mode** — the *current* program is rebuilt instantly
+           with no engine solve: the same blue set keeps aggregating at
+           the reduced width, spilling its overflow one hop up
+           (:func:`~repro.collectives.schedule.build_program` under
+           ``cap_scale``), so the utilization regression is bounded by
+           the overflow traffic. With a capacity ledger
+           (``cfg.capacity``), a switch whose *effective* integer
+           capacity ``floor(capacity * scale)`` drops below its live
+           claims evicts claims — this workload's own blue first (it
+           reverts to forwarding in the instant program), then foreign
+           admissions (counted in the event record as
+           ``evicted_foreign``); a scale of exactly 0 always forces blue
+           off the switch, composing with the blocked/failed semantics.
+        2. **replan** — fingerprint-keyed cache-or-solve (the
+           fingerprint carries the capacity-scale vector, so restoring a
+           previously-seen capacity state is a table lookup).
+
+        Every event is recorded in ``degraded_events`` with the instant
+        (degraded) and replanned utilization, the capacity delta, and
+        any evictions.
+        """
+        n = self.topo0.tree.n
+        items: list[tuple[int, float]] = []
+        for s, f in scales.items():
+            s = _switch_id(s, n)
+            f = float(f)
+            if not np.isfinite(f) or f < 0 or f > 1:
+                raise ValueError(f"capacity scale for switch {s} must be "
+                                 f"a finite fraction in [0, 1], got {f}")
+            items.append((s, f))
+        evicted_foreign = 0
+        capacity_delta = 0
+        dropped_own: list[int] = []
+        if self._residual is not None:
+            for s, f in items:
+                eff_old = self._effective_capacity(self._switch_scale[s])
+                eff_new = self._effective_capacity(f)
+                capacity_delta += eff_new - eff_old
+                claims = eff_old - int(self._residual[s])
+                if claims > eff_new:
+                    shortfall = claims - eff_new
+                    if (shortfall and self.blue is not None
+                            and self.blue[s]):
+                        dropped_own.append(s)
+                        shortfall -= 1
+                        claims -= 1
+                    evicted_foreign += shortfall
+                    claims -= shortfall
+                self._residual[s] = eff_new - claims
+        else:
+            # unbounded capacity: only a dead plane (scale 0) forces the
+            # workload's blue off — any positive scale still aggregates,
+            # at reduced width
+            dropped_own = [s for s, f in items
+                           if f == 0.0 and self.blue is not None
+                           and self.blue[s]]
+        for s, f in items:
+            self._switch_scale[s] = f
+        self.topo = self._effective_topo()
+        degraded_util = None
+        if self.blue is not None:
+            deg_blue = self.blue
+            if dropped_own:
+                deg_blue = self.blue.copy()
+                deg_blue[dropped_own] = False
+            # stage 1: instant bounded-regression program — no solve,
+            # same (surviving) blues, overflow spilled to parents/hosts
+            self.program = build_program(self.topo, deg_blue)
+            self.blue = deg_blue
+            degraded_util = self.program.utilization
+        hit = self._recover()
+        self.degraded_events.append({
+            "switches": tuple(s for s, _ in items),
+            "scales": tuple(f for _, f in items),
+            "was_blue": tuple(dropped_own),
+            "evicted_foreign": int(evicted_foreign),
+            "capacity_delta": int(capacity_delta),
+            "degraded_utilization": degraded_util,
+            "utilization": self.program.utilization,
+            "cache_hit": hit,
+        })
+        return self.program
+
     def on_link_degrade(self, rates: dict[int, float]) -> ReduceProgram:
         """Up-link rate changes: re-solve with the updated rho.
 
@@ -334,10 +453,8 @@ class Orchestrator:
         lookup).
         """
         n = self.topo0.tree.n
-        items = [(int(v), float(f)) for v, f in rates.items()]
+        items = [(_switch_id(v, n), float(f)) for v, f in rates.items()]
         for v, f in items:
-            if not 0 <= v < n:
-                raise ValueError(f"switch {v} out of range [0, {n})")
             if not np.isfinite(f) or f <= 0:
                 raise ValueError(f"rate fraction for switch {v} must be a "
                                  f"positive finite number, got {f}")
@@ -420,6 +537,7 @@ class Orchestrator:
         self.quarantined = np.zeros(new_topo.n_devices, bool)
         self.switch_blocked = np.zeros(n, bool)
         self._link_rate = np.ones(n)
+        self._switch_scale = np.ones(n)
         self._residual = (np.full(n, self.cfg.capacity, np.int64)
                           if self.cfg.capacity is not None else None)
         self._residuals = [self._residual]

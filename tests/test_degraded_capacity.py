@@ -1,0 +1,351 @@
+"""Partial-capacity degradation: cost model, spill programs, orchestrator.
+
+The execution-layer fault-tolerance path of PR 9: per-switch capacity
+scales a(s) in [0, 1] (``ClusterTopology.cap_scale``), the degraded
+reduce programs that spill a degraded blue switch's overflow one hop up
+with *bit-identical* results to the fault-free fold, and the
+orchestrator's two-stage ``on_switch_degrade`` recovery.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.collectives import (build_fleet, build_program, chip_level_tree,
+                               degrade_switches, fail_devices, fleet_tree,
+                               plan, plan_batch, plan_congestion, plan_fleet)
+from repro.collectives.schedule import (CompactOp, CompressOp, FoldOp,
+                                        PermuteRound)
+from repro.core.reduce import (agg_width, messages_up, messages_up_degraded,
+                               phi, phi_degraded)
+from repro.runtime import (ChaosReport, Orchestrator, OrchestratorConfig)
+
+
+# -- cost model ---------------------------------------------------------------
+
+def test_agg_width():
+    assert agg_width(5, 1.0) == 5              # pristine folds everything
+    assert agg_width(5, 2.0) == 5
+    assert agg_width(4, 0.5) == 2
+    assert agg_width(5, 0.5) == 3              # ceil
+    assert agg_width(8, 0.01) == 1             # never below one partial
+    assert agg_width(1, 0.01) == 1             # single message: no spill
+    assert agg_width(0, 0.5) == 0
+
+
+def test_messages_up_degraded_matches_pristine_when_unscaled():
+    topo = fleet_tree(2, 2, 4)
+    t = topo.tree
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        blue = rng.random(t.n) < 0.4
+        base = messages_up(t, topo.load, blue)
+        assert np.array_equal(
+            messages_up_degraded(t, topo.load, blue, None), base)
+        assert np.array_equal(
+            messages_up_degraded(t, topo.load, blue, np.ones(t.n)), base)
+        assert phi_degraded(t, topo.load, blue) == phi(t, topo.load, blue)
+
+
+def test_messages_up_degraded_spills_overflow_locally():
+    # two pods of two racks: degrade one blue rack switch, check only its
+    # own up-edge carries extra messages and everything above is pristine
+    topo = fleet_tree(2, 2, 4)
+    t = topo.tree
+    blue = np.zeros(t.n, bool)
+    rack = int(np.nonzero(topo.load > 1)[0][0])
+    blue[rack] = True
+    base = messages_up(t, topo.load, blue)
+    w = int(topo.load[rack])                   # leaf blue: w = its load
+    scale = np.ones(t.n)
+    scale[rack] = 0.5
+    deg = messages_up_degraded(t, topo.load, blue, scale)
+    spill = w - agg_width(w, 0.5)
+    assert deg[rack] == base[rack] + spill
+    others = [v for v in range(t.n) if v != rack]
+    assert np.array_equal(deg[others], base[others])
+    # the premium is exactly the overflow traffic on the degraded up-edge
+    assert phi_degraded(t, topo.load, blue, scale) == pytest.approx(
+        phi(t, topo.load, blue) + spill * t.rho[rack])
+    # shape validation
+    with pytest.raises(ValueError, match="cap_scale shape"):
+        messages_up_degraded(t, topo.load, blue, np.ones(3))
+
+
+# -- topology plumbing --------------------------------------------------------
+
+def test_degrade_switches_validates_and_composes():
+    topo = fleet_tree(2, 2, 4)
+    n = topo.tree.n
+    t2 = degrade_switches(topo, {1: 0.5, 3: 0.25})
+    assert t2.cap_scale[1] == 0.5 and t2.cap_scale[3] == 0.25
+    assert t2.cap_scale[0] == 1.0
+    # composition multiplies (a second partial loss on the same plane)
+    t3 = degrade_switches(t2, {1: 0.5})
+    assert t3.cap_scale[1] == 0.25
+    for bad in ({-1: 0.5}, {n: 0.5}, {0: -0.1}, {0: 1.5},
+                {0: float("nan")}, {0: float("inf")}):
+        with pytest.raises(ValueError):
+            degrade_switches(topo, bad)
+    # tree, loads, rho untouched: capacity loss is not a link/load event
+    assert np.array_equal(t2.load, topo.load)
+    assert np.array_equal(t2.tree.rho, topo.tree.rho)
+
+
+def test_zero_scale_composes_with_blocked_semantics():
+    topo = fleet_tree(2, 2, 4)
+    dead = degrade_switches(topo, {2: 0.0})
+    cand = dead.candidates()
+    assert not cand[2] and cand.sum() == topo.tree.n - 1
+    blue = np.zeros(topo.tree.n, bool)
+    blue[2] = True
+    with pytest.raises(ValueError, match="zero-capacity"):
+        build_program(dead, blue)
+    # planners route around it, exactly like a blocked switch
+    b, _ = plan(dead, 3)
+    assert not b[2]
+    (tp,) = plan_batch([dead], 3)
+    assert not tp.blue[2]
+
+
+def test_fail_devices_preserves_cap_scale():
+    topo = degrade_switches(fleet_tree(2, 2, 4), {1: 0.5})
+    t2 = fail_devices(topo, [0, 1])
+    assert t2.cap_scale is not None and t2.cap_scale[1] == 0.5
+
+
+# -- degraded programs: cost accounting + bitwise identity --------------------
+
+def _run_host(prog, x):
+    """Numpy interpreter mirroring the executor's arithmetic exactly
+    (float32 strict sequential left folds)."""
+    n_dev, d = x.shape
+    buf = np.zeros((n_dev, prog.n_slots, d), np.float32)
+    buf[:, 0] = x
+    for op in prog.ops:
+        if isinstance(op, PermuteRound):
+            old = buf.copy()
+            for (s, dst) in op.perm:
+                off = int(op.recv_offset[dst])
+                cnt = int(op.recv_count[dst])
+                buf[dst, off:off + cnt] += old[s, :cnt]
+        elif isinstance(op, CompressOp):
+            for dev in range(n_dev):
+                if op.flag[dev]:
+                    w = int(op.width[dev])
+                    acc = buf[dev, 0].copy()
+                    for j in range(1, w):
+                        acc = acc + buf[dev, j]
+                    buf[dev, 1:w] = 0
+                    buf[dev, 0] = acc
+        elif isinstance(op, FoldOp):
+            for dev in range(n_dev):
+                cnt = int(op.count[dev])
+                if cnt > 0:
+                    st = int(op.start[dev])
+                    acc = buf[dev, st].copy()
+                    for j in range(1, cnt):
+                        acc = acc + buf[dev, st + j]
+                    buf[dev, st] = acc
+        else:  # CompactOp
+            old = buf.copy()
+            for dev in range(n_dev):
+                for i, srci in enumerate(op.src[dev]):
+                    buf[dev, i] = old[dev, srci] if srci >= 0 else 0
+    acc = buf[prog.root_home, 0].copy()
+    for j in range(1, prog.root_count):
+        acc = acc + buf[prog.root_home, j]
+    return acc
+
+
+def test_degraded_program_cost_accounting():
+    topo = chip_level_tree(2, 2, 2)
+    t = topo.tree
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        blue = rng.random(t.n) < 0.5
+        scales = {int(s): float(rng.choice([0.75, 0.5, 0.25]))
+                  for s in rng.choice(t.n, size=2, replace=False)}
+        td = degrade_switches(topo, scales)
+        prog = build_program(td, blue)
+        assert prog.utilization == phi_degraded(t, td.load, blue,
+                                                td.cap_scale)
+        assert prog.total_network_messages == int(
+            messages_up_degraded(t, td.load, blue, td.cap_scale).sum())
+        assert prog.utilization >= build_program(topo, blue).utilization
+
+
+def test_degraded_program_bitwise_identical_to_pristine():
+    """The load-bearing claim: a degraded switch's spill completes at its
+    parent's host with the SAME summation order, so gradients are
+    bit-identical to the fault-free reduce."""
+    rng = np.random.default_rng(1)
+    total = 0
+    for dims in [(1, 2, 2), (2, 2, 2), (1, 4, 2), (2, 2, 4)]:
+        topo = chip_level_tree(*dims)
+        t = topo.tree
+        x = rng.standard_normal((topo.n_devices, 3)).astype(np.float32)
+        for _ in range(12):
+            blue = rng.random(t.n) < 0.5
+            ref = _run_host(build_program(topo, blue), x)
+            np.testing.assert_allclose(ref, x.sum(0), atol=1e-4)
+            ks = rng.choice(t.n, size=int(rng.integers(1, 4)),
+                            replace=False)
+            scales = {int(s): float(rng.choice(
+                [0.9, 0.75, 0.5, 0.25, 0.1, 0.01])) for s in ks}
+            td = degrade_switches(topo, scales)
+            pd = build_program(td, blue)
+            got = _run_host(pd, x)
+            assert got.tobytes() == ref.tobytes(), (dims, scales)
+            total += 1
+    assert total >= 40
+
+
+def test_degraded_root_spill_completes_at_destination():
+    topo = chip_level_tree(2, 2, 2)
+    t = topo.tree
+    blue = np.ones(t.n, bool)
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((8, 4)).astype(np.float32)
+    ref = _run_host(build_program(topo, blue), x)
+    w = len(t.children[t.root])                # all-blue: one msg per child
+    for f in (0.6, 0.3, 0.05):
+        td = degrade_switches(topo, {int(t.root): f})
+        pd = build_program(td, blue)
+        # the root's overflow rides to the destination as extra messages
+        assert pd.root_count == 1 + (w - agg_width(w, f))
+        assert _run_host(pd, x).tobytes() == ref.tobytes()
+    assert build_program(
+        degrade_switches(topo, {int(t.root): 0.05}), blue).root_count > 1
+
+
+# -- planner capacity snapshots ----------------------------------------------
+
+def test_plan_congestion_scales_capacity_snapshot():
+    """A degraded topology with capacity C must plan exactly like the
+    pristine one with the pre-scaled snapshot C * cap_scale — the
+    capacity the pricing loop sees is the *effective* one."""
+    topo = fleet_tree(2, 2, 4)
+    n = topo.tree.n
+    deg = degrade_switches(topo, {v: 0.25 for v in range(n)})
+    kw = dict(max_rounds=3, cap_beta=2.0, cap_frac=0.5)
+    got = plan_congestion(deg, 3, count=4, capacity=np.full(n, 4.0), **kw)
+    want = plan_congestion(topo, 3, count=4, capacity=np.full(n, 1.0), **kw)
+    for a, b in zip(got.plans, want.plans, strict=True):
+        assert np.array_equal(a.blue, b.blue)
+
+
+def test_plan_fleet_scales_per_tree_capacity():
+    fleet = build_fleet(2, 2, 2, 2)
+    n0 = fleet.topos[0].tree.n
+    n1 = fleet.topos[1].tree.n
+    deg = dataclasses.replace(
+        fleet, topos=(degrade_switches(fleet.topos[0],
+                                       {v: 0.25 for v in range(n0)}),
+                      fleet.topos[1]))
+    caps = [np.full(n0, 4.0), np.full(n1, 4.0)]
+    kw = dict(max_rounds=3, cap_beta=2.0, cap_frac=0.5)
+    got = plan_fleet(deg, 2, counts=[2, 2], capacity=caps, **kw)
+    want = plan_fleet(fleet, 2, counts=[2, 2],
+                      capacity=[caps[0] * 0.25, caps[1]], **kw)
+    for a, b in zip(got.plans, want.plans, strict=True):
+        assert np.array_equal(a.blue, b.blue)
+    assert np.array_equal(got.tree_of, want.tree_of)
+
+
+# -- orchestrator two-stage recovery -----------------------------------------
+
+def mk(k=3, capacity=None):
+    topo = chip_level_tree(n_pods=2, racks_per_pod=3, chips_per_rack=2)
+    return topo, Orchestrator(topo, OrchestratorConfig(k=k,
+                                                       capacity=capacity))
+
+
+def test_on_switch_degrade_two_stage_and_cached_restore():
+    topo, orch = mk(k=3)
+    u0 = orch.program.utilization
+    s = int(np.nonzero(orch.blue)[0][0])
+    orch.on_switch_degrade({s: 0.5})
+    ev = orch.degraded_events[-1]
+    assert ev["switches"] == (s,) and ev["scales"] == (0.5,)
+    # stage 1 exists and is a bounded regression, stage 2 never worse
+    assert ev["degraded_utilization"] >= u0
+    assert ev["utilization"] <= ev["degraded_utilization"]
+    assert not ev["cache_hit"]                 # first time: honest solve
+    # restoring the plane is a fingerprint-keyed cache lookup
+    orch.on_switch_degrade({s: 1.0})
+    ev2 = orch.degraded_events[-1]
+    assert ev2["cache_hit"]
+    assert orch.program.utilization == u0
+    assert (orch._switch_scale == 1.0).all()
+
+
+def test_on_switch_degrade_zero_forces_blue_off():
+    topo, orch = mk(k=3)
+    s = int(np.nonzero(orch.blue)[0][0])
+    orch.on_switch_degrade({s: 0.0})
+    assert not orch.blue[s]
+    assert orch.degraded_events[-1]["was_blue"] == (s,)
+
+
+def test_on_switch_degrade_validates_before_mutating():
+    topo, orch = mk(k=3)
+    n = topo.tree.n
+    state = orch._switch_scale.copy()
+    for bad in ({n: 0.5}, {-1: 0.5}, {0: -0.1}, {0: 1.5},
+                {0: float("nan")}, {1.5: 0.5}):
+        with pytest.raises(ValueError):
+            orch.on_switch_degrade(bad)
+        assert np.array_equal(orch._switch_scale, state)
+
+
+def test_on_switch_degrade_ledger_eviction():
+    topo, orch = mk(k=3, capacity=2)
+    orch.begin_workloads(2)                    # foreign claims on switches
+    s = int(np.nonzero(orch.blue)[0][0])
+    orch.on_switch_degrade({s: 0.25})          # floor(2 * 0.25) = 0 units
+    ev = orch.degraded_events[-1]
+    assert ev["capacity_delta"] == -2
+    assert s in ev["was_blue"] or ev["evicted_foreign"] > 0
+    assert (orch._residual >= 0).all()
+    assert not orch.blue[s]                    # own blue evicted first
+
+
+def test_fingerprint_distinguishes_capacity_states():
+    topo, orch = mk(k=3)
+    s = int(np.nonzero(orch.blue)[0][0])
+    fp0 = orch._fingerprint()
+    orch.on_switch_degrade({s: 0.5})
+    assert orch._fingerprint() != fp0
+    orch.on_switch_degrade({s: 1.0})
+    assert orch._fingerprint() == fp0
+
+
+def test_on_rescale_resets_switch_scale():
+    topo, orch = mk(k=3)
+    orch.on_switch_degrade({1: 0.5})
+    orch.on_rescale(n_pods=2, racks_per_pod=2, chips_per_rack=2)
+    assert (orch._switch_scale == 1.0).all()
+    assert orch.topo.cap_scale is None or (orch.topo.cap_scale == 1.0).all()
+
+
+# -- satellite regressions ----------------------------------------------------
+
+def test_on_link_degrade_validates_rates():
+    topo, orch = mk(k=3)
+    n = topo.tree.n
+    state = orch._link_rate.copy()
+    for bad in ({n: 0.5}, {-1: 0.5}, {0: 0.0}, {0: -1.0},
+                {0: float("nan")}, {0: float("inf")}, {2.5: 0.5}):
+        with pytest.raises(ValueError):
+            orch.on_link_degrade(bad)
+        assert np.array_equal(orch._link_rate, state)
+
+
+def test_events_per_sec_zero_duration_guard():
+    rep = ChaosReport(records=[], events=5, replans=0, cache_hits=0,
+                      stale=0, invariant_checks=5, seconds=0.0)
+    assert rep.events_per_sec == 0.0
+    rep2 = ChaosReport(records=[], events=10, replans=0, cache_hits=0,
+                       stale=0, invariant_checks=10, seconds=2.0)
+    assert rep2.events_per_sec == 5.0

@@ -308,3 +308,131 @@ def test_chaos_invariants_hold_for_random_seeds(seed):
     orch = Orchestrator(topo, cfg)
     report = ChaosHarness(orch, verify_cache_hits=True).run(events)
     assert report.invariant_checks == 12
+
+
+# -- partial-capacity degrades + training-coupled chaos (PR 9) ----------------
+
+def test_generate_scenario_emits_capacity_degrades():
+    topo = fleet_tree(2, 2, 4)
+    cfg = OrchestratorConfig(k=3, straggler_quantile=0.5)
+    events = generate_scenario(topo, n_events=50, seed=21, cfg=cfg)
+    kinds = {e.kind for e in events}
+    assert "degrade_switch" in kinds
+    # mirror feasibility: never degrade an already-degraded or blocked
+    # plane, recover only degraded ones, fractions from CAP_FRACS
+    from repro.runtime.faults import CAP_FRACS
+    cap_degraded, blocked = set(), set()
+    for ev in events:
+        if ev.kind == "degrade_switch":
+            (s, f), = ev.rates
+            assert s not in cap_degraded and s not in blocked
+            assert f in CAP_FRACS
+            cap_degraded.add(s)
+        elif ev.kind == "recover_switch_capacity":
+            (s, f), = ev.rates
+            assert s in cap_degraded and f == 1.0
+            cap_degraded.discard(s)
+        elif ev.kind == "fail_switch":
+            blocked |= set(ev.switches)
+        elif ev.kind == "recover_switch":
+            blocked -= set(ev.switches)
+        elif ev.kind == "fail_rack":
+            blocked |= set(ev.switches)
+    # crash events only appear for training-coupled scenarios
+    assert "crash" not in kinds
+    trained = generate_scenario(topo, n_events=200, seed=21, cfg=cfg,
+                                train=True)
+    assert any(e.kind == "crash" for e in trained)
+
+
+def test_chaos_scenario_with_degrades_all_invariants():
+    """50 seeded events including partial-capacity degrade events, with
+    the capacity ledger on: zero invariant violations (the harness raises
+    otherwise), and the ledger balances through evictions."""
+    topo = fleet_tree(2, 2, 4)
+    cfg = OrchestratorConfig(k=3, capacity=2, straggler_quantile=0.5)
+    events = generate_scenario(topo, n_events=50, seed=21, cfg=cfg,
+                               admits=True)
+    assert sum(e.kind == "degrade_switch" for e in events) >= 2
+    orch = Orchestrator(topo, cfg)
+    report = ChaosHarness(orch, verify_cache_hits=True).run(events)
+    assert report.events == 50
+    assert report.invariant_checks == 50
+    assert (orch._residual >= 0).all()
+
+
+def test_chaos_over_fleet_topology():
+    """Chaos over a multi-tree Fleet: the orchestrator's own tree takes
+    the events (incl. preplan_links replay) while the fleet's shared-core
+    pricing stays in every fingerprint."""
+    from repro.collectives import build_fleet
+    fleet = build_fleet(2, 2, 2, 2)
+    cfg = OrchestratorConfig(k=2, capacity=2, straggler_quantile=0.5,
+                             straggler_patience=2)
+    orch = Orchestrator(fleet, cfg)
+    events = generate_scenario(fleet.topos[0], n_events=40, seed=5,
+                               cfg=cfg, admits=True)
+    report = ChaosHarness(orch, verify_cache_hits=True).run(events)
+    assert report.invariant_checks == 40
+    # the preplan_links -> degrade_link replay path fills and serves the
+    # cache (mirror recoveries also hit); a fleet run still gets lookups
+    preplans = sum(e.kind == "preplan_links" for e in events)
+    if preplans and report.cache_hits == 0:
+        # at minimum the entries exist for the preplanned what-ifs
+        assert orch.preplan_cache_stats()["entries"] > 0
+
+
+def test_training_coupled_chaos_single_device(tmp_path):
+    """ChaosTrainer on the in-process device: every event drives a real
+    optimizer step, lossless events are bitwise-checked against the
+    fault-free program, crashes restart from the checkpoint."""
+    jax = pytest.importorskip("jax")
+    from repro.launch.train import dp_fleet
+    from repro.runtime import ChaosTrainer
+
+    topo = dp_fleet(jax.device_count())
+    cfg = OrchestratorConfig(k=min(2, topo.tree.n))
+    orch = Orchestrator(topo, cfg)
+    blues = np.nonzero(orch.blue)[0]
+    s = int(blues[0]) if len(blues) else 0     # 1-device fleets go all-red
+    trainer = ChaosTrainer(orch, seq=16, global_batch=4,
+                           ckpt_dir=str(tmp_path), ckpt_every=2)
+    h = ChaosHarness(orch, trainer=trainer)
+    events = [
+        FaultEvent("degrade_switch", rates=((s, 0.5),)),
+        FaultEvent("degrade_switch", rates=((s, 0.25),)),
+        FaultEvent("crash"),
+        FaultEvent("recover_switch_capacity", rates=((s, 1.0),)),
+        FaultEvent("crash"),
+    ]
+    report = h.run(events)
+    tr = report.train
+    assert tr["steps"] == len(events)
+    assert tr["restores"] == 2
+    assert tr["bitwise_checks"] >= 1
+    assert report.invariant_checks == len(events)
+    losses = [r["loss"] for r in report.records]
+    assert all(np.isfinite(losses))
+    # crash without a checkpoint directory is an invariant violation
+    t2 = ChaosTrainer(Orchestrator(topo, cfg), seq=16, global_batch=4)
+    with pytest.raises(InvariantViolation, match="checkpoint"):
+        ChaosHarness(t2.orch, trainer=t2).step(FaultEvent("crash"))
+
+
+@pytest.mark.slow
+def test_degraded_executor_and_training_subprocess():
+    """8-device shard_map: degraded programs bitwise-identical to the
+    fault-free reduce, and the training-coupled chaos loop end-to-end."""
+    import pathlib
+    import subprocess
+    import sys
+    script = (pathlib.Path(__file__).parent / "helpers"
+              / "degraded_check.py")
+    import os
+    env = {**os.environ, "PYTHONPATH": "src"}
+    out = subprocess.run([sys.executable, str(script)],
+                         cwd=str(pathlib.Path(__file__).parent.parent),
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "DEGRADED_CHECK_OK" in out.stdout
