@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-from . import (beyond_bottleneck, beyond_budget, congestion, degraded,
-               engine_throughput, fig6_strategies, fig7_online,
+from . import (admission, beyond_bottleneck, beyond_budget, congestion,
+               degraded, engine_throughput, fig6_strategies, fig7_online,
                fig8_usecases, fig9_runtime, fig10_scaling, fig11_scalefree,
                fleet, paper_claims, recovery)
 
@@ -30,6 +30,8 @@ BENCHES = [
      congestion.run, {}),
     ("fleet (coupled multi-tree vs independent per-tree solves)",
      fleet.run, {}),
+    ("admission (device-side hard admission vs host claim accounting)",
+     admission.run, {}),
     ("beyond_bottleneck (paper §8 conjecture)", beyond_bottleneck.run, {}),
     ("beyond_budget (paper §8 open problem 2)", beyond_budget.run, {}),
     ("recovery (preplan cache + degraded mode + chaos)", recovery.run, {}),
@@ -47,6 +49,7 @@ FAST_OVERRIDES = {
     "engine_throughput": dict(reps=2, batches=(8, 64)),
     "congestion (": dict(tenants=(8,), max_rounds=4, reps=1),
     "fleet (": dict(tenants=(8,), max_rounds=4, reps=1),
+    "admission (": dict(tenants=(16,), reps=1),
     "recovery (": dict(n_pods=2, racks=2, events=30),
     "degraded (": dict(n_pods=2, racks=2, events=25, seq=16),
 }

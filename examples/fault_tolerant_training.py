@@ -127,8 +127,11 @@ if args.chaos:
           f"checked after each (seed {args.seed})")
     print("=" * 64)
     cfg = OrchestratorConfig(k=3, capacity=2, straggler_quantile=0.5)
+    # admits=True mixes in multi-job events: device-side hard-admission
+    # waves, preemptive admissions, and job releases — the per-switch
+    # claim-conservation invariant is checked after each
     events = generate_scenario(topo, n_events=args.chaos, seed=args.seed,
-                               cfg=cfg)
+                               cfg=cfg, admits=True)
     orch = Orchestrator(topo, cfg)
     orch.preplan_switch_failures()
     report = ChaosHarness(orch, verify_cache_hits=True).run(events)

@@ -30,6 +30,22 @@ def _check_capacity(capacity, n: int, where: str):
     return c
 
 
+def _check_residual(residual, n: int, where: str):
+    """Boundary validation of a per-switch residual-capacity ledger:
+    shape (n,), finite, integer-valued, non-negative. Returns the int64
+    copy the engine's hard-admission path consumes."""
+    r = np.asarray(residual)
+    if r.shape != (n,):
+        raise ValueError(f"{where}: residual shape {r.shape} != ({n},)")
+    rf = r.astype(np.float64)
+    if not np.all(np.isfinite(rf)) or np.any(rf != np.floor(rf)):
+        raise ValueError(f"{where}: residual must be integer-valued and "
+                         "finite")
+    if np.any(rf < 0):
+        raise ValueError(f"{where}: residual must be non-negative")
+    return r.astype(np.int64)
+
+
 @dataclasses.dataclass
 class PermuteRound:
     perm: list                      # [(src_dev, dst_dev)]
@@ -374,7 +390,8 @@ def plan_congestion(topo: ClusterTopology, k: int,
     one per-tenant load vector (or pass ``count`` to admit that many
     copies of ``topo.load`` — the orchestrator's admission shape);
     ``avails`` is a shared mask or a per-tenant list. Driver keyword
-    arguments (``max_rounds``, ``alpha``, ``capacity``, ``device_loop``,
+    arguments (``max_rounds``, ``alpha``, ``capacity``, ``residual`` —
+    the hard in-loop admission ledger, validated here — ``device_loop``,
     ``options=EngineOptions(...)``, …) pass through. Returns a
     :class:`CongestionPlan` — per-tenant :class:`TenantPlan`\\ s in tenant
     order plus the driver's congestion diagnostics (baseline vs achieved
@@ -403,6 +420,9 @@ def plan_congestion(topo: ClusterTopology, k: int,
             # its aggregation plane crowds twice as fast
             driver_kw["capacity"] = (driver_kw["capacity"]
                                      * np.clip(topo.cap_scale, 0.0, 1.0))
+    if driver_kw.get("residual") is not None:
+        driver_kw["residual"] = _check_residual(
+            driver_kw["residual"], topo.tree.n, "plan_congestion")
     if topo.blocked is not None or topo.cap_scale is not None:
         # blocked and zero-capacity switches leave Lambda for every tenant
         if avails is None or isinstance(avails, np.ndarray):
@@ -470,8 +490,9 @@ def plan_fleet(fleet: Fleet, k: int,
     ``loads`` + ``tree_of`` (one load vector per tenant, shaped for its
     own tree). ``avails`` is an optional per-tenant mask list; each
     tree's fault domains (``topo.blocked``) are subtracted for its own
-    tenants. ``capacity`` in ``driver_kw`` is a per-*tree* list of
-    capacity vectors, validated here at the call boundary. Compiles one
+    tenants. ``capacity`` / ``residual`` in ``driver_kw`` are per-*tree*
+    lists of capacity vectors / hard-admission ledgers, validated here at
+    the call boundary. Compiles one
     :class:`ReduceProgram` per tenant on its own tree and returns a
     :class:`FleetPlan`.
 
@@ -528,6 +549,14 @@ def plan_fleet(fleet: Fleet, k: int,
             * (np.clip(fleet.topos[g].cap_scale, 0.0, 1.0)
                if fleet.topos[g].cap_scale is not None else 1.0)
             for g, c in enumerate(caps)]
+    if driver_kw.get("residual") is not None:
+        resid = list(driver_kw["residual"])
+        if len(resid) != N:
+            raise ValueError(f"{len(resid)} residual ledgers for {N} trees "
+                             "— plan_fleet takes one per tree")
+        driver_kw["residual"] = [
+            _check_residual(rg, fleet.topos[g].tree.n, "plan_fleet")
+            for g, rg in enumerate(resid)]
     from ..engine import solve_fleet
     res = solve_fleet([tp.tree for tp in fleet.topos], loads, tid, k,
                       avails,

@@ -59,6 +59,21 @@ jitted round pieces called one round at a time through the public
 API, with masks, counts and the profile pulled to the host every round
 (PR 3's transfer pattern).
 
+**In-loop hard admission.** ``residual=`` hands the driver per-tree
+residual-capacity vectors (the orchestrator's integer claim ledgers) and
+turns capacity from a *price* into a *constraint inside the loop*: every
+round, each tenant's candidate blue set is truncated to the claims the
+residual actually covers (claims are ranked per switch in tenant order —
+exactly the order a host ledger would replay them) and the rejected
+(tenant, switch) pairs are *banned* through the existing ``avail``
+mechanics, so the next round's DP routes those tenants elsewhere. The
+loop therefore converges directly to placements a per-switch ledger can
+admit wholesale — no host round-trip per admission, no post-hoc
+eviction. The device loop computes claim ranks with an exact integer
+one-hot cumsum; the host reference replays a literal sequential numpy
+ledger per round — integer arithmetic both ways, so the two paths stay
+round-for-round bit-identical (``tests/test_admission_device.py``).
+
 **Parity.** Both paths run the *identical* float32 update arithmetic —
 the shared :func:`_round_penalty` body (profiles + reweights for tree and
 core links), the shared
@@ -128,6 +143,13 @@ class CongestionResult:
     bytes_to_host: int = 0    # device->host traffic the driver actually paid
     tree_of: np.ndarray | None = None    # (T,) tenant -> tree index
     core_congestion: np.ndarray | None = None  # (C,) shared-core profile
+    # -- hard admission (residual=...) only --
+    admission_dropped: np.ndarray | None = None  # (T,) int64 claims the
+                                                 # best round could not admit
+    residual_after: list | None = None   # per-tree int64 residual ledgers
+                                         # after the best round's claims
+    admission_log: list | None = None    # per-round (T,) dropped-claim
+                                         # counts when record_rounds=True
 
     @property
     def improvement(self) -> float:
@@ -196,6 +218,26 @@ def _core_extra(core_base: jax.Array, wc: jax.Array,
     rate. ``core_base``: (C,) core rho; ``wc``: (T, C) weights;
     ``core_onf``: (T, C) float incidence. Returns (T,)."""
     return (core_base[None, :] * wc * core_onf).sum(axis=1)
+
+
+def _admit_ranked(blue, tree_id, residual, *, n_trees: int):
+    """Hard-admission truncation of one round's candidate blue sets.
+
+    A claim by tenant t on switch s is admitted iff fewer than
+    ``residual[tree_of[t], s]`` lower-indexed tenants of the same tree
+    also claim s this round — the exact set a sequential per-tree ledger
+    replay in tenant order admits, computed in one shot as an integer
+    one-hot cumsum (exact and order-free per element, so the device loop
+    and the host ledger reference agree bitwise). Returns
+    ``(admitted, rejected)`` bool (T, links) masks.
+    """
+    oh = (tree_id[:, None] == jnp.arange(n_trees)[None, :]).astype(jnp.int32)
+    cum = jnp.cumsum(blue.astype(jnp.int32)[:, None, :] * oh[:, :, None],
+                     axis=0)                       # (T, N, links)
+    rank = (cum * oh[:, :, None]).sum(axis=1)      # own-tree row, (T, links)
+    res_t = jnp.take(residual, tree_id, axis=0)
+    admitted = blue & (rank <= res_t)
+    return admitted, blue & ~admitted
 
 
 def _round_penalty(w, wc, msgs, blue, root_idx, tree_id, link_w,
@@ -270,17 +312,19 @@ def _edge_scale_core(base_edge: jax.Array, w: jax.Array, extra: jax.Array,
     jax.jit,
     static_argnames=("lvl_off", "lvl_width", "lvl_internal", "lvl_sub", "k",
                      "cap", "use_pallas", "interpret", "max_rounds",
-                     "record", "priced", "n_trees"))
+                     "record", "priced", "admit", "n_trees"))
 def _device_driver(
     kid, load, send, avail, par, cidx, root_slot,     # packed solve inputs
     base_edge, anc, valid,                            # rho-override inputs
     tree_id, link_w, capacity,                        # (T,), (N,S), (N,S)
+    residual,                                         # (N,S) int32 ledgers
     core_base, core_on, core_link_w,                  # (C,), (T,C), (C,)
     alpha_t, ramp_t,                                  # (T, 1) tenant ramps
     hot_frac, w_cap, cap_beta, cap_frac, patience,    # scalars
     *,
     lvl_off, lvl_width, lvl_internal, lvl_sub, k, cap, use_pallas,
-    interpret, max_rounds: int, record: bool, priced: bool, n_trees: int,
+    interpret, max_rounds: int, record: bool, priced: bool, admit: bool,
+    n_trees: int,
 ):
     """The whole penalty loop as one ``lax.while_loop`` on the accelerator.
 
@@ -292,14 +336,23 @@ def _device_driver(
     masks, the scalar history and (when ``record``) the per-round logs;
     nothing crosses the host boundary until the caller pulls the final
     tuple.
+
+    With ``admit`` the carry also owns the availability masks: each
+    round's candidate blues are truncated to what ``residual`` covers
+    (:func:`_admit_ranked`) and rejected claims ban their (tenant,
+    switch) pair from every later round, so the loop converges to
+    placements the per-switch ledgers admit outright. A round that
+    banned something never triggers the patience stop — the search
+    landscape just changed under it.
     """
     T, S, _ = kid.shape
     dt = base_edge.dtype
     C = core_base.shape[0]
 
     def body(carry):
-        (r, w, wc, stale, stop, best_cmax, best_blue, best_round,
-         history, prof0, prof0c, log_rho, log_blue) = carry
+        (r, w, wc, avail, stale, stop, best_cmax, best_blue, best_round,
+         best_drop, history, prof0, prof0c, log_rho, log_blue,
+         log_drop) = carry
         if C:
             extra = _core_extra(core_base, wc, core_on.astype(dt))
             edges = scaled_edges(base_edge, w, extra, root_slot)
@@ -315,6 +368,15 @@ def _device_driver(
             blocks, kid, par, cidx, load, send, avail, R, root_slot,
             lvl_off=lvl_off, lvl_width=lvl_width,
             lvl_internal=lvl_internal, lvl_sub=lvl_sub, k=k, cap=cap)
+        if admit:
+            blue, rejected = _admit_ranked(blue, tree_id, residual,
+                                           n_trees=n_trees)
+            avail = avail & ~rejected              # persistent in-loop ban
+            banned = rejected.any()
+            drop = rejected.sum(axis=1).astype(jnp.int32)
+        else:
+            banned = jnp.asarray(False)
+            drop = jnp.zeros((T,), jnp.int32)
         msgs = _messages_body(
             kid, load, send, blue,
             lvl_off=lvl_off, lvl_width=lvl_width, lvl_internal=lvl_internal)
@@ -328,30 +390,38 @@ def _device_driver(
         if record:
             log_rho = log_rho.at[r].set(edges)
             log_blue = log_blue.at[r].set(blue)
+            log_drop = log_drop.at[r].set(drop)
         better = cmax < best_cmax                    # strict: earliest wins
         best_blue = jnp.where(better, blue, best_blue)
         best_round = jnp.where(better, r, best_round)
         best_cmax = jnp.where(better, cmax, best_cmax)
+        best_drop = jnp.where(better, drop, best_drop)
         stale = jnp.where(better, 0, stale + 1)
-        stop = (cmax == 0.0) | (stale >= patience)
-        return (r + 1, w2, wc2, stale, stop, best_cmax, best_blue,
-                best_round, history, prof0, prof0c, log_rho, log_blue)
+        if admit:
+            stop = (cmax == 0.0) | ((stale >= patience) & ~banned)
+        else:
+            stop = (cmax == 0.0) | (stale >= patience)
+        return (r + 1, w2, wc2, avail, stale, stop, best_cmax, best_blue,
+                best_round, best_drop, history, prof0, prof0c, log_rho,
+                log_blue, log_drop)
 
     def cond(carry):
-        return (carry[0] < max_rounds) & ~carry[4]
+        return (carry[0] < max_rounds) & ~carry[5]
 
     Rl = max_rounds if record else 0
     init = (jnp.int32(0), jnp.ones((T, S), dt), jnp.ones((T, C), dt),
-            jnp.int32(0), jnp.asarray(False), jnp.asarray(jnp.inf, dt),
-            jnp.zeros((T, S), bool), jnp.int32(0),
+            avail, jnp.int32(0), jnp.asarray(False),
+            jnp.asarray(jnp.inf, dt),
+            jnp.zeros((T, S), bool), jnp.int32(0), jnp.zeros((T,), jnp.int32),
             jnp.full((max_rounds,), -1.0, dt), jnp.zeros((n_trees, S), dt),
             jnp.zeros((C,), dt),
-            jnp.zeros((Rl, T, S), dt), jnp.zeros((Rl, T, S), bool))
+            jnp.zeros((Rl, T, S), dt), jnp.zeros((Rl, T, S), bool),
+            jnp.zeros((Rl, T), jnp.int32))
     out = jax.lax.while_loop(cond, body, init)
-    (r, _, _, _, _, best_cmax, best_blue, best_round, history, prof0,
-     prof0c, log_rho, log_blue) = out
-    return best_blue, best_round, r, history, prof0, prof0c, log_rho, \
-        log_blue
+    (r, _, _, _, _, _, best_cmax, best_blue, best_round, best_drop, history,
+     prof0, prof0c, log_rho, log_blue, log_drop) = out
+    return best_blue, best_round, r, history, prof0, prof0c, best_drop, \
+        log_rho, log_blue, log_drop
 
 
 # ---------------------------------------------------------------------------
@@ -376,6 +446,7 @@ def solve_fleet(
     capacity: Sequence[np.ndarray] | None = None,
     cap_beta: float = 1.0,
     cap_frac: float = 0.75,
+    residual: Sequence[np.ndarray] | None = None,
     record_rounds: bool = False,
     device_loop: bool = True,
     options: EngineOptions | None = None,
@@ -395,8 +466,17 @@ def solve_fleet(
 
     ``avail``: a per-tenant sequence of masks (or None). ``capacity``:
     per-*tree* capacity vectors (len N) switching on capacity pricing for
-    tree links. All other knobs as :func:`solve_congestion`, which is the
-    degenerate ``N=1, C=0`` call of this driver.
+    tree links. ``residual``: per-*tree* integer residual-capacity
+    ledgers (len N) switching on **hard in-loop admission** — every
+    round's candidate blues are truncated to the claims the ledger
+    covers, rejected claims ban their (tenant, switch) pair via the
+    ``avail`` mechanics, and the returned placements are feasible against
+    the ledgers wholesale (``admission_dropped`` / ``residual_after`` on
+    the result report the best round's shortfall and remaining
+    capacity). Zero-residual and zero-capacity switches leave every
+    affected tenant's candidate set up front. All other knobs as
+    :func:`solve_congestion`, which is the degenerate ``N=1, C=0`` call
+    of this driver.
     """
     T = len(loads)
     if T == 0:
@@ -411,6 +491,14 @@ def solve_fleet(
         raise ValueError("solve_fleet re-solves on device-side effective "
                          "rho; the debug_tables host replay is not usable "
                          "here")
+    # capacity-knob boundary validation: _crowding clamps capacity with
+    # 1e-6 (a numerical guard, not a semantics), so malformed knobs must
+    # die here, not price a zero-capacity switch as admittable
+    if not (np.isfinite(cap_frac) and 0.0 < cap_frac <= 1.0):
+        raise ValueError(f"cap_frac must be in (0, 1], got {cap_frac}")
+    if not (np.isfinite(cap_beta) and cap_beta >= 0.0):
+        raise ValueError(f"cap_beta must be finite and >= 0, "
+                         f"got {cap_beta}")
     trees = list(trees)
     N = len(trees)
     tid_np = np.asarray(list(tree_of), np.int32)
@@ -432,6 +520,51 @@ def solve_fleet(
             if c.shape != (trees[g].n,):
                 raise ValueError(f"capacity shape {c.shape} != "
                                  f"({trees[g].n},)")
+            if not np.all(np.isfinite(c)) or np.any(c < 0):
+                raise ValueError(f"capacity vector for tree {g} must be "
+                                 "finite and non-negative")
+    admit = residual is not None
+    if admit:
+        residual = [np.asarray(rg) for rg in residual]
+        if len(residual) != N:
+            raise ValueError(f"{len(residual)} residual ledgers for "
+                             f"{N} trees")
+        checked = []
+        for g, rg in enumerate(residual):
+            if rg.shape != (trees[g].n,):
+                raise ValueError(f"residual shape {rg.shape} != "
+                                 f"({trees[g].n},) for tree {g}")
+            if (not np.all(np.isfinite(rg.astype(np.float64)))
+                    or np.any(rg.astype(np.float64)
+                              != np.floor(rg.astype(np.float64)))):
+                raise ValueError(f"residual ledger for tree {g} must be "
+                                 "integer-valued")
+            if np.any(rg.astype(np.int64) < 0):
+                raise ValueError(f"residual ledger for tree {g} must be "
+                                 "non-negative")
+            checked.append(rg.astype(np.int64))
+        residual = checked
+    if admit or priced:
+        # hard-unavailability flows through the avail mechanics: switches
+        # with no residual (or no capacity at all) leave their tree's
+        # tenants' candidate sets before the first solve
+        hard = [np.ones(tr.n, bool) for tr in trees]
+        for g in range(N):
+            if admit:
+                hard[g] &= residual[g] > 0
+            if priced:
+                hard[g] &= capacity[g] > 0
+        if not all(h.all() for h in hard):
+            avails = [
+                (hard[g].copy() if a is None
+                 else np.asarray(a, bool) & hard[g])
+                for a, g in zip(avails, tid_np)]
+    if admit:
+        # the host ledger replay mutates its per-tenant masks (persistent
+        # bans) — every tenant needs its own materialized copy
+        avails = [np.ones(trees[g].n, bool) if a is None
+                  else np.array(a, dtype=bool, copy=True)
+                  for a, g in zip(avails, tid_np)]
     use_pallas = opts.use_pallas
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
@@ -478,6 +611,17 @@ def solve_fleet(
                                    cap_node[g][np.maximum(sn_g, 0)], 1.0)
     cap_node = jnp.asarray(cap_node, dt)
     cap_slot = jnp.asarray(cap_slot, dt)
+    # residual ledger twins (node for the host replay, slot for the device
+    # rank truncation) — padding slots read T so they can never reject
+    res_slot_np = np.full((N, f.n_slots), T, np.int64)
+    if admit:
+        res_node_np = np.zeros((N, f.n_max), np.int64)
+        for g in range(N):
+            res_node_np[g, : trees[g].n] = residual[g]
+            sn_g = f.slot_node[rep[g]]
+            res_slot_np[g] = np.where(
+                sn_g >= 0, res_node_np[g][np.maximum(sn_g, 0)], T)
+    res_slot = jnp.asarray(res_slot_np, jnp.int32)
     tree_id = jnp.asarray(lay.tree_of)
     core_base = jnp.asarray(lay.core_rho, dt)              # (C,)
     core_on = jnp.asarray(lay.core_inc)                    # (T, C) bool
@@ -485,17 +629,18 @@ def solve_fleet(
     if device_loop:
         state = _run_device(f, lay, k, opts, use_pallas, kid, load, send,
                             avail_d, par, cidx, root_d, base_edge, anc,
-                            valid, tree_id, link_w_slot, cap_slot,
+                            valid, tree_id, link_w_slot, cap_slot, res_slot,
                             core_base, core_on, core_link_w, alpha_t,
                             ramp_t, scal, patience, max_rounds,
-                            record_rounds, priced)
+                            record_rounds, priced, admit)
     else:
         state = _run_host(trees, loads, tid_np, avails, f, lay, k, opts,
-                          link_w_node, cap_node, core_base, core_on,
-                          core_link_w, alpha_t, ramp_t, scal, patience,
-                          max_rounds, record_rounds, priced)
+                          link_w_node, cap_node, residual, core_base,
+                          core_on, core_link_w, alpha_t, ramp_t, scal,
+                          patience, max_rounds, record_rounds, priced,
+                          admit)
     (blue_node, best_round, rounds, history, prof0_node, prof0_core,
-     rounds_log, bytes_to_host) = state
+     rounds_log, bytes_to_host, best_drop, admission_log) = state
 
     n_big = int(lay.tree_n.max())
     blue = blue_node[:, :n_big]
@@ -515,6 +660,16 @@ def solve_fleet(
         parts.append(prof0_core)
     base0 = np.concatenate(parts)
     base0 = base0[base0 > 0]
+    admission_dropped = residual_after = None
+    if admit:
+        admission_dropped = np.asarray(best_drop, np.int64)
+        residual_after = []
+        for g in range(N):
+            claims = np.zeros(trees[g].n, np.int64)
+            for t in range(T):
+                if int(tid_np[t]) == g:
+                    claims += blue[t, : trees[g].n].astype(np.int64)
+            residual_after.append(residual[g] - claims)
     return CongestionResult(
         blue=blue, costs=m.costs, msgs=m.msgs, congestion=m.congestion,
         max_congestion=m.max_congestion,
@@ -524,7 +679,9 @@ def solve_fleet(
         if base0.size else 0.0,
         rounds=rounds, best_round=best_round, history=history,
         rounds_log=rounds_log, bytes_to_host=bytes_to_host,
-        tree_of=tid_np.copy(), core_congestion=m.core_congestion)
+        tree_of=tid_np.copy(), core_congestion=m.core_congestion,
+        admission_dropped=admission_dropped, residual_after=residual_after,
+        admission_log=admission_log)
 
 
 def solve_congestion(
@@ -542,6 +699,7 @@ def solve_congestion(
     capacity: np.ndarray | None = None,
     cap_beta: float = 1.0,
     cap_frac: float = 0.75,
+    residual: np.ndarray | None = None,
     record_rounds: bool = False,
     device_loop: bool = True,
     options: EngineOptions | None = None,
@@ -564,6 +722,14 @@ def solve_congestion(
     usage/capacity``) jointly with the hot-link boost, for the tenants
     sitting on them — steering the fleet away from switches the
     orchestrator is about to run out of.
+
+    ``residual`` (n,) switches on **hard in-loop admission**: an integer
+    per-switch claim ledger the returned placements are guaranteed
+    feasible against — every round's candidate blues are truncated to the
+    claims the ledger covers (in tenant order, exactly a sequential
+    ledger replay) and rejected (tenant, switch) pairs are banned for the
+    rest of the loop. ``admission_dropped`` / ``residual_after`` on the
+    result report the best round's shortfall and remaining capacity.
 
     ``device_loop=True`` (default) runs the whole loop on the
     accelerator (one jitted ``lax.while_loop``; O(1) host transfer
@@ -597,12 +763,18 @@ def solve_congestion(
         if capacity.shape != (n,):
             raise ValueError(f"capacity shape {capacity.shape} != ({n},)")
         capacity = [capacity]
+    if residual is not None:
+        residual = np.asarray(residual)
+        if residual.shape != (n,):
+            raise ValueError(f"residual shape {residual.shape} != ({n},)")
+        residual = [residual]
     return solve_fleet(
         [tree], loads, [0] * T, k, avails,
         max_rounds=max_rounds, patience=patience, alpha=alpha,
         hot_frac=hot_frac, w_cap=w_cap, rho_weighted=rho_weighted,
         capacity=capacity, cap_beta=cap_beta, cap_frac=cap_frac,
-        record_rounds=record_rounds, device_loop=device_loop, options=opts)
+        residual=residual, record_rounds=record_rounds,
+        device_loop=device_loop, options=opts)
 
 
 def _slots_to_nodes_np(x_slot: np.ndarray, f, rows=None) -> np.ndarray:
@@ -621,13 +793,14 @@ def _slots_to_nodes_np(x_slot: np.ndarray, f, rows=None) -> np.ndarray:
 
 def _run_device(f, lay, k, opts, use_pallas, kid, load, send, avail_d, par,
                 cidx, root_d, base_edge, anc, valid, tree_id, link_w_slot,
-                cap_slot, core_base, core_on, core_link_w, alpha_t, ramp_t,
-                scal, patience, max_rounds, record_rounds, priced):
+                cap_slot, res_slot, core_base, core_on, core_link_w, alpha_t,
+                ramp_t, scal, patience, max_rounds, record_rounds, priced,
+                admit):
     """Dispatch the resident loop; pull the final state once."""
     n_big = int(lay.tree_n.max())
     out = _device_driver(
         kid, load, send, avail_d, par, cidx, root_d,
-        base_edge, anc, valid, tree_id, link_w_slot, cap_slot,
+        base_edge, anc, valid, tree_id, link_w_slot, cap_slot, res_slot,
         core_base, core_on, core_link_w, alpha_t, ramp_t,
         scal["hot_frac"], scal["w_cap"], scal["cap_beta"], scal["cap_frac"],
         jnp.int32(patience),
@@ -635,13 +808,15 @@ def _run_device(f, lay, k, opts, use_pallas, kid, load, send, avail_d, par,
         lvl_internal=f.lvl_internal, lvl_sub=f.lvl_sub,
         k=k, cap=bool(opts.cap), use_pallas=bool(use_pallas),
         interpret=bool(opts.interpret), max_rounds=int(max_rounds),
-        record=bool(record_rounds), priced=priced,
+        record=bool(record_rounds), priced=priced, admit=admit,
         n_trees=int(lay.n_trees))
     (best_blue_s, best_round_d, rounds_d, hist_d, prof0_s, prof0c_d,
-     log_rho, log_blue) = (np.asarray(x) for x in out)
+     best_drop_d, log_rho, log_blue, log_drop) = \
+        (np.asarray(x) for x in out)
     bytes_to_host = sum(int(x.nbytes) for x in
                         (best_blue_s, best_round_d, rounds_d, hist_d,
-                         prof0_s, prof0c_d, log_rho, log_blue))
+                         prof0_s, prof0c_d, best_drop_d, log_rho, log_blue,
+                         log_drop))
     rounds = int(rounds_d)
     best_round = int(best_round_d)
     history = [float(c) for c in hist_d[:rounds]]
@@ -655,13 +830,18 @@ def _run_device(f, lay, k, opts, use_pallas, kid, load, send, avail_d, par,
                 log_rho[r], f).astype(np.float64)[:, :n_big]
             rounds_log.append(
                 (rho_eff, _slots_to_nodes_np(log_blue[r], f)[:, :n_big]))
+    admission_log = None
+    if admit and record_rounds:
+        admission_log = [log_drop[r].astype(np.int64) for r in range(rounds)]
     return (blue_node, best_round, rounds, history, prof0_node, prof0c_d,
-            rounds_log, bytes_to_host)
+            rounds_log, bytes_to_host, best_drop_d.astype(np.int64),
+            admission_log)
 
 
 def _run_host(trees, loads, tid_np, avails, f, lay, k, opts, link_w_node,
-              cap_node, core_base, core_on, core_link_w, alpha_t, ramp_t,
-              scal, patience, max_rounds, record_rounds, priced):
+              cap_node, residual, core_base, core_on, core_link_w, alpha_t,
+              ramp_t, scal, patience, max_rounds, record_rounds, priced,
+              admit):
     """Host-driven parity reference: one round per step, everything pulled.
 
     Runs the *same* jitted round arithmetic as the device loop — the
@@ -674,6 +854,11 @@ def _run_host(trees, loads, tid_np, avails, f, lay, k, opts, link_w_node,
     packed arrays, pull the masks, message counts and C_max back down
     (the transfer/packing bill the device loop exists to eliminate; the
     rebuilt arrays are bit-identical, so parity is unaffected).
+
+    With ``admit`` each round replays a literal sequential per-tree
+    ledger in tenant order — the admission the device loop's one-hot
+    cumsum rank computes in one shot — and persists rejections into
+    ``avails`` so the next round's rebuilt Forest excludes them.
     """
     from ..core.congestion import messages_up_forest
     from .batched import solve_forest
@@ -689,9 +874,11 @@ def _run_host(trees, loads, tid_np, avails, f, lay, k, opts, link_w_node,
     tree_id = jnp.asarray(lay.tree_of)
     w = jnp.ones((T, n_max), dt)
     wc = jnp.ones((T, C), dt)
-    best = None                     # (cmax, round, blue)
+    best = None                     # (cmax, round, blue, drop)
     history: list[float] = []
     rounds_log: list | None = [] if record_rounds else None
+    admission_log: list | None = \
+        [] if (admit and record_rounds) else None
     prof0_node = prof0_core = None
     bytes_to_host = 0
     stale = 0
@@ -708,6 +895,26 @@ def _run_host(trees, loads, tid_np, avails, f, lay, k, opts, link_w_node,
             res = solve_forest(fr, k, options=opts, rho_scale=w)
         blue = res.blue
         bytes_to_host += res.bytes_to_host
+        drop = np.zeros(T, np.int64)
+        banned = False
+        if admit:
+            # the sequential ledger the device one-hot cumsum reproduces:
+            # claims replayed in tenant order against a fresh per-round
+            # copy of the residual; rejections ban the (tenant, switch)
+            # pair from every later round via the avail masks
+            blue = blue.copy()
+            ledger = [rg.copy() for rg in residual]
+            for t in range(T):
+                g = int(tid_np[t])
+                led = ledger[g]
+                for v in np.nonzero(blue[t, : trees[g].n])[0]:
+                    if led[v] > 0:
+                        led[v] -= 1
+                    else:
+                        blue[t, v] = False
+                        avails[t][v] = False
+                        drop[t] += 1
+                        banned = True
         msgs64 = messages_up_forest(fr, blue)
         msgs = jnp.asarray(msgs64.astype(np.int32))
         bytes_to_host += msgs.nbytes
@@ -731,14 +938,18 @@ def _run_host(trees, loads, tid_np, avails, f, lay, k, opts, link_w_node,
             bytes_to_host += rho_eff.nbytes
             rounds_log.append((rho_eff.astype(np.float64)[:, :n_big],
                                blue[:, :n_big].copy()))
+        if admission_log is not None:
+            admission_log.append(drop.copy())
         if best is None or cmax < best[0]:           # strict: earliest wins
-            best = (cmax, r, blue)
+            best = (cmax, r, blue, drop)
             stale = 0
         else:
             stale += 1
-        if cmax == 0 or stale >= patience:
+        # a round that banned something changed the search landscape under
+        # the loop — it never counts toward the patience stop
+        if cmax == 0 or (stale >= patience and not banned):
             break
         w, wc = w2, wc2
-    _, best_round, blue_node = best
+    _, best_round, blue_node, best_drop = best
     return (blue_node, best_round, rounds, history, prof0_node, prof0_core,
-            rounds_log, bytes_to_host)
+            rounds_log, bytes_to_host, best_drop, admission_log)

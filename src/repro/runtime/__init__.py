@@ -1,11 +1,13 @@
-from .orchestrator import Orchestrator, OrchestratorConfig
+from .orchestrator import (JobRecord, Orchestrator, OrchestratorConfig,
+                           PreemptionPolicy)
 from .stragglers import StragglerPolicy, StragglerReport
 from .elastic import fleet_dims, rescale, scaling_budget
 from .faults import (ChaosHarness, ChaosReport, ChaosTrainer,
                      FaultEvent, InvariantViolation,
                      generate_scenario)
 
-__all__ = ["Orchestrator", "OrchestratorConfig", "StragglerPolicy",
+__all__ = ["JobRecord", "Orchestrator", "OrchestratorConfig",
+           "PreemptionPolicy", "StragglerPolicy",
            "StragglerReport", "fleet_dims", "rescale", "scaling_budget",
            "ChaosHarness", "ChaosReport", "ChaosTrainer", "FaultEvent",
            "InvariantViolation", "generate_scenario"]

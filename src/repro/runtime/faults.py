@@ -6,14 +6,18 @@ sequences they were tested under. This module makes those sequences
 event stream from a seed (device/switch/link faults, straggler storms,
 correlated rack failures, recoveries, link-degrade preplanning that later
 degrade events replay against the cache, optional multi-workload
-admissions),
+admissions — including device-side hard-admission waves, preemptive
+admissions under a :class:`~repro.runtime.PreemptionPolicy`, and job
+releases),
 and :class:`ChaosHarness` steps an :class:`~repro.runtime.Orchestrator`
 through it, re-checking the system's safety invariants after *every*
 event:
 
   * the blue budget is respected and no blue sits on a blocked switch;
-  * per-switch capacity residuals never go negative, and the claim
-    ledger balances (capacity handed out == blue claims live);
+  * per-switch capacity residuals never go negative, the claim
+    ledger balances (capacity handed out == blue claims live), and
+    every tree's residual plus its registered job claims reconstructs
+    the effective per-switch capacity exactly;
   * the installed program's utilization equals ``phi_degraded``
     recomputed from the current topology, mask, and per-switch capacity
     scales — the program is never stale, and never aggregates on a
@@ -36,13 +40,16 @@ import numpy as np
 
 from ..collectives.schedule import build_program, plan
 from ..core.reduce import phi_degraded
-from .orchestrator import Orchestrator, OrchestratorConfig
+from .orchestrator import Orchestrator, OrchestratorConfig, PreemptionPolicy
 
 KINDS = ("fail_device", "recover_device", "fail_switch", "recover_switch",
          "degrade_link", "recover_link", "straggler_storm",
          "recover_quarantined", "fail_rack", "admit_workloads",
          "preplan_links", "degrade_switch", "recover_switch_capacity",
-         "crash")
+         "crash", "admit_jobs", "preempt_admit", "release_jobs")
+
+#: preemption policies preempt_admit events cycle through
+POLICIES = PreemptionPolicy.KINDS
 
 DEGRADE_FACTORS = (0.5, 0.25, 0.125)
 # partial aggregation-capacity loss fractions for degrade_switch events
@@ -62,7 +69,8 @@ class FaultEvent:
     rates: tuple = ()         # degrade/recover_link: ((switch, fraction),)
     steps: int = 0            # straggler_storm: observed steps
     slow: float = 8.0         # straggler_storm: slow-device duration
-    count: int = 0            # admit_workloads
+    count: int = 0            # admit_workloads / admit_jobs / release_jobs
+    policy: str = ""          # preempt_admit: PreemptionPolicy kind
 
 
 @dataclasses.dataclass
@@ -122,6 +130,7 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
     failed: set[int] = set()
     quarantined: set[int] = set()
     blocked: set[int] = set()
+    live_jobs = 0   # mirrored registry size (upper bound; release is lenient)
     degraded: dict[int, float] = {}
     cap_degraded: dict[int, float] = {}   # partially-degraded agg planes
     # link-degrade what-ifs the stream has preplanned; later degrade_link
@@ -174,6 +183,10 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
             menu.append(("fail_rack", 1.0))
         if admits:
             menu.append(("admit_workloads", 1.0))
+            menu.append(("admit_jobs", 1.0))
+            if live_jobs:
+                menu.append(("preempt_admit", 1.0))
+                menu.append(("release_jobs", 1.0))
 
         kinds = [k for k, _ in menu]
         w = np.asarray([w for _, w in menu])
@@ -258,9 +271,23 @@ def generate_scenario(topo, n_events: int = 50, seed: int = 0,
                 for v in sorted(int(v) for v in vs))
             preplanned_links.extend(pairs)
             events.append(FaultEvent("preplan_links", rates=pairs))
+        elif kind == "admit_jobs":
+            c = int(rng.integers(1, 3))
+            live_jobs += c
+            events.append(FaultEvent("admit_jobs", count=c))
+        elif kind == "preempt_admit":
+            c = int(rng.integers(1, 3))
+            live_jobs += c          # admitted wave joins the registry
+            events.append(FaultEvent("preempt_admit", count=c,
+                                     policy=str(rng.choice(POLICIES))))
+        elif kind == "release_jobs":
+            c = int(rng.integers(1, 3))
+            live_jobs = max(0, live_jobs - c)
+            events.append(FaultEvent("release_jobs", count=c))
         else:  # admit_workloads
-            events.append(FaultEvent("admit_workloads",
-                                     count=int(rng.integers(1, 3))))
+            c = int(rng.integers(1, 3))
+            live_jobs += c
+            events.append(FaultEvent("admit_workloads", count=c))
     return events
 
 
@@ -335,6 +362,23 @@ class ChaosHarness:
             before = int(o._residual.sum())
             o.begin_workloads(ev.count)
             self._extra_claims += before - int(o._residual.sum())
+        elif ev.kind in ("admit_jobs", "preempt_admit"):
+            # hard admission inside the device penalty loop; preempt_admit
+            # additionally arms a preemption policy so a wave that cannot
+            # fit evicts victims instead of failing
+            before = int(o._residual.sum())
+            policy = (PreemptionPolicy(kind=ev.policy or "priority")
+                      if ev.kind == "preempt_admit" else None)
+            o.begin_workloads(ev.count, congestion_aware=True,
+                              device_admission=True, preemption=policy,
+                              max_rounds=2)
+            self._extra_claims += before - int(o._residual.sum())
+        elif ev.kind == "release_jobs":
+            ids = sorted(o.jobs)[:ev.count]
+            if ids:
+                before = int(o._residual.sum())
+                o.release_workloads(ids)
+                self._extra_claims += before - int(o._residual.sum())
         elif ev.kind in ("degrade_switch", "recover_switch_capacity"):
             o.on_switch_degrade(dict(ev.rates))
             rec = o.degraded_events[-1]
@@ -393,6 +437,32 @@ class ChaosHarness:
                      f"claim ledger imbalance: {handed_out} capacity "
                      f"claimed vs {int(o.blue.sum())} blue + "
                      f"{self._extra_claims} admitted")
+            # per-switch conservation: each tree's residual plus the job
+            # registry's claims against it (and the orchestrator's own
+            # blue on tree 0) must reconstruct the effective capacity of
+            # every switch exactly — no claim leaks, no double-frees
+            eff0 = np.asarray([o._effective_capacity(sc)
+                               for sc in o._switch_scale], np.int64)
+            for g, res_g in enumerate(o._residuals):
+                if res_g is None:
+                    continue
+                total = res_g.astype(np.int64, copy=True)
+                for j in o.jobs.values():
+                    if j.tree == g:
+                        total += j.blue.astype(np.int64)
+                if g == 0:
+                    total += o.blue.astype(np.int64)
+                    eff = eff0
+                else:
+                    eff = np.full(res_g.shape[0], o.cfg.capacity,
+                                  np.int64)
+                if not np.array_equal(total, eff):
+                    s = int(np.nonzero(total != eff)[0][0])
+                    _require(False,
+                             f"per-switch claim conservation broken on "
+                             f"tree {g} switch {s}: residual+claims "
+                             f"{int(total[s])} != effective capacity "
+                             f"{int(eff[s])}")
         fresh_util = phi_degraded(o.topo.tree, o.topo.load, o.blue,
                                   o.topo.cap_scale)
         _require(o.program.utilization == fresh_util,

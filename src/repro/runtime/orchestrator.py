@@ -63,6 +63,68 @@ class OrchestratorConfig:
     straggler_patience: int = 3
 
 
+@dataclasses.dataclass(frozen=True)
+class JobRecord:
+    """One admitted workload's claim on the fleet's capacity ledgers.
+
+    Every admission path files one of these in ``Orchestrator.jobs``, so
+    the per-switch conservation invariant — claims + residual ==
+    effective capacity — is auditable, and the preemption policies have
+    real victims to order. ``benefit`` is the utilization the job's
+    in-network aggregation saves vs the all-red fallback (the regression
+    preempting it would cost), snapshotted at admission.
+    """
+
+    job_id: int
+    tree: int                 # fleet tree the claims live on
+    blue: np.ndarray          # (n,) bool claim mask (mutated by evictions)
+    priority: int             # higher = evicted later
+    order: int                # admission sequence number (age)
+    utilization: float
+    benefit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """Which existing claims to evict when admission cannot fit a wave.
+
+    ``kind`` picks the victim ordering:
+
+    * ``"priority"`` — lowest ``priority`` first (ties: youngest first);
+    * ``"youngest-first"`` — most recently admitted first (the classic
+      make-room-for-the-old-guard policy);
+    * ``"cheapest-regression"`` — smallest aggregation ``benefit`` first,
+      so the utilization lost by evicting is minimal.
+
+    ``max_victims`` bounds one admission wave's evictions — preemption
+    reuses the two-stage instant-degrade-then-replan shape of
+    :meth:`Orchestrator.on_switch_failure`: victims release their claims
+    instantly (no solve), then the wave re-solves once against the freed
+    ledger.
+    """
+
+    kind: str = "priority"
+    max_victims: int = 8
+
+    KINDS = ("priority", "youngest-first", "cheapest-regression")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown preemption policy {self.kind!r}; "
+                             f"pick one of {self.KINDS}")
+        if self.max_victims < 1:
+            raise ValueError(f"max_victims must be >= 1, "
+                             f"got {self.max_victims}")
+
+    def order_victims(self, jobs: list) -> list:
+        """Candidate jobs in eviction order (first = first evicted)."""
+        if self.kind == "priority":
+            return sorted(jobs, key=lambda j: (j.priority, -j.order))
+        if self.kind == "youngest-first":
+            return sorted(jobs, key=lambda j: -j.order)
+        return sorted(jobs, key=lambda j: (j.benefit, -j.order))
+
+
 class Orchestrator:
     """Owns topology -> placement -> program; replans on events."""
 
@@ -108,6 +170,19 @@ class Orchestrator:
         self.program: ReduceProgram | None = None
         self.last_congestion = None   # CongestionResult of the most recent
                                       # congestion-aware admission
+        # multi-job claim registry: every admission path files a JobRecord
+        # here (the orchestrator's own workload is NOT a job — it is never
+        # preempted); preemption orders its victims out of this registry
+        self.jobs: dict[int, JobRecord] = {}
+        self._job_seq = 0
+        self._allred_util: dict[int, float] = {}   # per-tree baseline cache
+        self.preemption_events: list[dict] = []
+        self.last_admission: dict | None = None    # telemetry of the most
+                                                   # recent begin_workloads
+        # device-admission preplan cache: the base fingerprint extended
+        # with (count, residual snapshot) — a separate store so the base
+        # recovery cache's staleness accounting is untouched
+        self._admission_cache: dict = {}
         # preplan cache: topology fingerprint -> solved placement. Filled by
         # preplan_failures / preplan_switch_failures and by every solve the
         # orchestrator performs (revisited states are lookups).
@@ -407,6 +482,16 @@ class Orchestrator:
                         claims -= 1
                     evicted_foreign += shortfall
                     claims -= shortfall
+                    # keep the job registry consistent with the ledger:
+                    # the evicted foreign claims come off the youngest
+                    # registered jobs holding s
+                    if shortfall:
+                        holders = sorted(
+                            (j for j in self.jobs.values()
+                             if j.tree == 0 and j.blue[s]),
+                            key=lambda j: -j.order)
+                        for j in holders[:shortfall]:
+                            j.blue[s] = False
                 self._residual[s] = eff_new - claims
         else:
             # unbounded capacity: only a dead plane (scale 0) forces the
@@ -541,6 +626,9 @@ class Orchestrator:
         self._residual = (np.full(n, self.cfg.capacity, np.int64)
                           if self.cfg.capacity is not None else None)
         self._residuals = [self._residual]
+        self.jobs.clear()             # rescale drains every foreign claim
+        self._allred_util.clear()
+        self._admission_cache.clear()
         self.stragglers = StragglerPolicy(
             new_topo.n_devices, quantile=self.cfg.straggler_quantile,
             slack=self.cfg.straggler_slack,
@@ -551,7 +639,59 @@ class Orchestrator:
         self._replace()
         return self.program
 
-    def begin_workload(self) -> ReduceProgram:
+    # -- multi-job admission --------------------------------------------------
+    def _register_job(self, blue: np.ndarray, prog: ReduceProgram,
+                      tree: int = 0, priority: int = 0) -> JobRecord:
+        """File an admitted workload's claims in the job registry."""
+        base = self._allred_util.get(tree)
+        if base is None:
+            tp = self.fleet.topos[tree]
+            base = build_program(
+                tp, np.zeros(tp.tree.n, bool)).utilization
+            self._allred_util[tree] = base
+        self._job_seq += 1
+        rec = JobRecord(
+            job_id=self._job_seq, tree=int(tree),
+            blue=np.array(blue, dtype=bool, copy=True),
+            priority=int(priority), order=self._job_seq,
+            utilization=float(prog.utilization),
+            benefit=float(base - prog.utilization))
+        self.jobs[rec.job_id] = rec
+        return rec
+
+    def release_workloads(self, job_ids) -> int:
+        """Release admitted jobs' capacity claims; returns claims freed."""
+        freed = 0
+        for jid in job_ids:
+            j = self.jobs.pop(int(jid), None)
+            if j is None:
+                raise KeyError(f"unknown job id {jid}")
+            self._residuals[j.tree][j.blue] += 1
+            freed += int(j.blue.sum())
+        return freed
+
+    def _preempt(self, policy: PreemptionPolicy, res) -> tuple[list, int]:
+        """Stage 1 of preemptive admission: evict registered jobs holding
+        claims on the switches the failed wave exhausted (instant — no
+        solve; the caller re-solves once against the freed ledger).
+        Returns ``(victim job ids, claims freed on exhausted switches)``.
+        """
+        scarce = [np.asarray(ra) == 0 for ra in res.residual_after]
+        shortfall = int(np.asarray(res.admission_dropped).sum())
+        cands = [j for j in self.jobs.values()
+                 if j.tree < len(scarce) and np.any(j.blue & scarce[j.tree])]
+        victims: list[int] = []
+        freed = 0
+        for j in policy.order_victims(cands):
+            if freed >= shortfall or len(victims) >= policy.max_victims:
+                break
+            self._residuals[j.tree][j.blue] += 1
+            freed += int((j.blue & scarce[j.tree]).sum())
+            victims.append(j.job_id)
+            del self.jobs[j.job_id]
+        return victims, freed
+
+    def begin_workload(self, priority: int = 0) -> ReduceProgram:
         """Multi-workload mode (Sec. 5.2): claim capacity for a new workload.
 
         The previous workload keeps its claim; the new one sees only
@@ -563,12 +703,16 @@ class Orchestrator:
                           strategy=self.cfg.strategy)
         self._residual[blue] -= 1
         self.utilization_history.append(prog.utilization)
+        self._register_job(blue, prog, priority=priority)
         return prog
 
     def begin_workloads(self, count: int | None = None,
                         congestion_aware: bool = False,
                         capacity_priced: bool = False,
                         fleet: list[int] | None = None,
+                        device_admission: bool = False,
+                        preemption: PreemptionPolicy | None = None,
+                        priority: int = 0,
                         **driver_kw) -> list[ReduceProgram]:
         """Admit ``count`` workloads with one batched engine solve.
 
@@ -609,16 +753,38 @@ class Orchestrator:
         the tenant's own tree only. Requires ``congestion_aware=True``
         (fleet admission *is* the congestion driver); a plain-topology
         orchestrator accepts ``fleet=[c]`` as the degenerate N=1 case.
+
+        ``device_admission=True`` (congestion-aware only) moves the hard
+        admission *inside* the device-resident penalty loop: the solver
+        gets this orchestrator's residual ledger(s) as the engine's
+        ``residual=`` constraint, so the returned placements are feasible
+        wholesale — claims apply with **zero** collision fallbacks and
+        zero extra host↔device round trips. When the wave still cannot
+        fit (the loop reports dropped claims), a :class:`PreemptionPolicy`
+        passed as ``preemption=`` evicts existing jobs from the exhausted
+        switches (instantly, no solve) and re-solves once. Telemetry of
+        every wave lands in ``self.last_admission``.
         """
         if self._residual is None:
             raise ValueError("begin_workloads needs capacity set")
         if congestion_aware and self.cfg.strategy != "soar":
             raise ValueError("congestion-aware admission needs "
                              f"strategy='soar', not {self.cfg.strategy!r}")
-        if not congestion_aware and (driver_kw or capacity_priced):
-            what = sorted(driver_kw) if driver_kw else "capacity_priced"
+        if not congestion_aware and (driver_kw or capacity_priced
+                                     or device_admission):
+            what = (sorted(driver_kw) if driver_kw else
+                    "device_admission" if device_admission
+                    else "capacity_priced")
             raise ValueError(f"driver options {what} only "
                              "apply with congestion_aware=True")
+        if preemption is not None and not device_admission:
+            raise ValueError("preemption= needs device_admission=True — "
+                             "only the in-loop admission path reports the "
+                             "shortfall preemption resolves")
+        if device_admission and "residual" in driver_kw:
+            raise ValueError("device_admission=True supplies the "
+                             "orchestrator's residual ledger; don't also "
+                             "pass residual= explicitly")
         if (count is None) == (fleet is None):
             raise ValueError("pass exactly one of count / fleet")
         if fleet is not None:
@@ -626,7 +792,9 @@ class Orchestrator:
                 raise ValueError("fleet admission is congestion-coupled; "
                                  "pass congestion_aware=True")
             return self._begin_fleet_workloads(
-                [int(c) for c in fleet], capacity_priced, driver_kw)
+                [int(c) for c in fleet], capacity_priced, driver_kw,
+                device_admission=device_admission, preemption=preemption,
+                priority=priority)
         if capacity_priced:
             if "capacity" in driver_kw:
                 raise ValueError("capacity_priced=True supplies the "
@@ -636,6 +804,9 @@ class Orchestrator:
                              capacity=self._residual.astype(np.float64))
         if count == 0:
             return []
+        if device_admission:
+            return self._begin_device_admission(count, preemption, priority,
+                                                driver_kw)
         snapshot = self._avail()
         driver_res = None
         if congestion_aware:
@@ -656,8 +827,15 @@ class Orchestrator:
                 collisions += 1
             self._residual[blue] -= 1
             self.utilization_history.append(prog.utilization)
+            self._register_job(blue, prog, priority=priority)
             progs.append(prog)
             admitted.append(blue)
+        # each collision fallback is one extra host-side solve round trip
+        # on top of the wave's batched solve
+        self.last_admission = {
+            "path": "host", "solves": 1 + collisions,
+            "round_trips": 1 + collisions, "collisions": collisions,
+            "dropped": 0, "preempted": (), "cache_hit": False}
         if driver_res is not None:
             # collision fallbacks replace driver placements with
             # utilization-only ones; re-measure so last_congestion reports
@@ -675,9 +853,82 @@ class Orchestrator:
             self.last_congestion = driver_res
         return progs
 
+    def _begin_device_admission(self, count: int,
+                                preemption: PreemptionPolicy | None,
+                                priority: int,
+                                driver_kw: dict) -> list[ReduceProgram]:
+        """Admission with the hard claim ledger *inside* the penalty loop.
+
+        One coupled solve returns placements already feasible against
+        ``self._residual`` — claims apply with zero collision fallbacks.
+        A wave the ledger cannot fit triggers at most one preemption pass
+        (policy-ordered evictions, then a single re-solve). Waves with no
+        extra driver knobs and no preemption are served from the
+        admission preplan cache when the exact (count, residual,
+        fingerprint) state recurs — zero solves, zero round trips.
+        """
+        cacheable = not driver_kw and preemption is None
+        key = ("admit", int(count), self._residual.tobytes(),
+               self._fingerprint())
+        if cacheable:
+            entry = self._admission_cache.get(key)
+            if entry is not None:
+                progs = []
+                for blue in entry["blues"]:
+                    prog = build_program(self.topo, blue)
+                    self._residual[blue] -= 1
+                    self.utilization_history.append(prog.utilization)
+                    self._register_job(blue, prog, priority=priority)
+                    progs.append(prog)
+                self.cache_recoveries += 1
+                self.last_admission = {
+                    "path": "device", "solves": 0, "round_trips": 0,
+                    "collisions": 0, "dropped": 0, "preempted": (),
+                    "cache_hit": True}
+                return progs
+        solves = 0
+        victims: list[int] = []
+        while True:
+            planned, res = plan_congestion(
+                self.topo, self.cfg.k, count=count, avails=self._avail(),
+                residual=self._residual.copy(), **driver_kw)
+            solves += 1
+            dropped = int(np.asarray(res.admission_dropped).sum())
+            if dropped == 0 or preemption is None or solves > 1:
+                break
+            evicted, freed = self._preempt(preemption, res)
+            if not evicted:
+                break
+            victims.extend(evicted)
+            self.preemption_events.append({
+                "policy": preemption.kind, "victims": tuple(evicted),
+                "freed": int(freed), "dropped_before": dropped})
+        progs: list[ReduceProgram] = []
+        for blue, prog in planned:
+            self._residual[blue] -= 1
+            self.utilization_history.append(prog.utilization)
+            self._register_job(blue, prog, priority=priority)
+            progs.append(prog)
+        if np.any(self._residual < 0):
+            raise RuntimeError("in-loop admission returned an infeasible "
+                               "placement — engine/ledger disagreement")
+        self.last_congestion = res
+        self.last_admission = {
+            "path": "device", "solves": solves, "round_trips": solves,
+            "collisions": 0, "dropped": dropped,
+            "preempted": tuple(victims), "cache_hit": False}
+        if cacheable and dropped == 0 and not victims:
+            self._admission_cache[key] = {
+                "blues": [np.array(b, dtype=bool, copy=True)
+                          for b, _ in planned]}
+        return progs
+
     def _begin_fleet_workloads(self, counts: list[int],
                                capacity_priced: bool,
-                               driver_kw: dict) -> list[ReduceProgram]:
+                               driver_kw: dict,
+                               device_admission: bool = False,
+                               preemption: PreemptionPolicy | None = None,
+                               priority: int = 0) -> list[ReduceProgram]:
         """Fleet admission: one coupled solve, per-tree capacity claims."""
         N = self.fleet.n_trees
         if len(counts) != N or any(c < 1 for c in counts):
@@ -691,6 +942,9 @@ class Orchestrator:
             driver_kw = dict(driver_kw, capacity=[
                 r.astype(np.float64) for r in self._residuals])
         tree_of = [g for g, c in enumerate(counts) for _ in range(c)]
+        if device_admission:
+            return self._begin_fleet_device(counts, tree_of, preemption,
+                                            priority, driver_kw)
         snaps = [r > 0 for r in self._residuals]
         planned, driver_res = plan_fleet(
             self.fleet, self.cfg.k, counts=counts,
@@ -707,8 +961,13 @@ class Orchestrator:
                 collisions += 1
             res_g[blue] -= 1                       # this tree's ledger
             self.utilization_history.append(prog.utilization)
+            self._register_job(blue, prog, tree=g, priority=priority)
             progs.append(prog)
             admitted.append(blue)
+        self.last_admission = {
+            "path": "host", "solves": 1 + collisions,
+            "round_trips": 1 + collisions, "collisions": collisions,
+            "dropped": 0, "preempted": (), "cache_hit": False}
         if collisions:
             # re-measure against the admitted placements (collision
             # fallbacks replaced driver ones) — global link-id space,
@@ -732,6 +991,49 @@ class Orchestrator:
                 mean_congestion=m.mean_congestion,
                 core_congestion=m.core_congestion)
         self.last_congestion = driver_res
+        return progs
+
+    def _begin_fleet_device(self, counts: list[int], tree_of: list[int],
+                            preemption: PreemptionPolicy | None,
+                            priority: int,
+                            driver_kw: dict) -> list[ReduceProgram]:
+        """Fleet admission with per-tree ledgers inside the loop — the
+        multi-tree twin of :meth:`_begin_device_admission` (no collision
+        fallbacks; at most one preemption pass)."""
+        solves = 0
+        victims: list[int] = []
+        while True:
+            snaps = [r > 0 for r in self._residuals]
+            planned, res = plan_fleet(
+                self.fleet, self.cfg.k, counts=counts,
+                avails=[snaps[g] for g in tree_of],
+                residual=[r.copy() for r in self._residuals], **driver_kw)
+            solves += 1
+            dropped = int(np.asarray(res.admission_dropped).sum())
+            if dropped == 0 or preemption is None or solves > 1:
+                break
+            evicted, freed = self._preempt(preemption, res)
+            if not evicted:
+                break
+            victims.extend(evicted)
+            self.preemption_events.append({
+                "policy": preemption.kind, "victims": tuple(evicted),
+                "freed": int(freed), "dropped_before": dropped})
+        progs: list[ReduceProgram] = []
+        for g, (blue, prog) in zip(tree_of, planned, strict=True):
+            self._residuals[g][blue] -= 1
+            self.utilization_history.append(prog.utilization)
+            self._register_job(blue, prog, tree=g, priority=priority)
+            progs.append(prog)
+        if any(np.any(r < 0) for r in self._residuals):
+            raise RuntimeError("in-loop fleet admission returned an "
+                               "infeasible placement — engine/ledger "
+                               "disagreement")
+        self.last_congestion = res
+        self.last_admission = {
+            "path": "device", "solves": solves, "round_trips": solves,
+            "collisions": 0, "dropped": dropped,
+            "preempted": tuple(victims), "cache_hit": False}
         return progs
 
     # -- telemetry ------------------------------------------------------------

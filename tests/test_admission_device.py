@@ -1,0 +1,331 @@
+"""Device-side hard admission vs the host ledger reference — bit parity —
+plus multi-job preemption and admission telemetry.
+
+The in-loop admission (``residual=``) truncates every round's candidate
+blues to the claims an integer per-switch ledger covers. The device loop
+applies the truncation as a rank-vs-residual mask inside the jitted
+``lax.while_loop``; the host driver replays the ledger *literally* —
+a sequential claim-by-claim walk in tenant order. Both are exact integer
+arithmetic, so with ``record_rounds=True`` they must agree round for
+round bitwise: same masks, same per-tenant dropped-claim counts, same
+remaining ledgers (see the parity notes in ``engine/congestion.py``).
+"""
+import numpy as np
+import pytest
+
+from repro.collectives import build_fleet, fleet_tree, plan_congestion
+from repro.core import bt
+from repro.core.tree import sample_load
+from repro.engine import solve_congestion, solve_fleet
+from repro.runtime import (Orchestrator, OrchestratorConfig,
+                           PreemptionPolicy)
+
+
+def _fleet(n=64, T=8, scheme="constant"):
+    t = bt(n, scheme)
+    loads = [sample_load(t, "power-law", seed=100 + s) for s in range(T)]
+    return t, loads
+
+
+def _assert_bit_identical(dev, host):
+    assert dev.history == host.history                  # f32 C_max, exact
+    assert dev.rounds == host.rounds
+    assert dev.best_round == host.best_round
+    assert np.array_equal(dev.blue, host.blue)
+    assert dev.max_congestion == host.max_congestion
+    assert np.array_equal(dev.msgs, host.msgs)
+    # the admission ledgers are integers — identical, not close
+    assert np.array_equal(dev.admission_dropped, host.admission_dropped)
+    for rg_d, rg_h in zip(dev.residual_after, host.residual_after,
+                          strict=True):
+        assert np.array_equal(rg_d, rg_h)
+    for r, ((dr, db), (hr, hb)) in enumerate(
+            zip(dev.rounds_log, host.rounds_log, strict=True)):
+        assert np.array_equal(dr, hr), f"rho_eff differs at round {r}"
+        assert np.array_equal(db, hb), f"masks differ at round {r}"
+    if dev.admission_log is not None or host.admission_log is not None:
+        for r, (dd, hd) in enumerate(zip(dev.admission_log,
+                                         host.admission_log, strict=True)):
+            assert np.array_equal(dd, hd), f"drops differ at round {r}"
+
+
+# -- engine-level differential suite ------------------------------------------
+
+@pytest.mark.parametrize("config", ["plain", "rho_weighted", "avail",
+                                    "priced", "tight"])
+def test_admission_device_bit_identical_to_host_ledger(config):
+    t, loads = _fleet(T=12)
+    kw = dict(residual=np.full(t.n, 3, np.int64))
+    if config == "rho_weighted":
+        kw["rho_weighted"] = True
+    elif config == "avail":
+        av = np.ones(t.n, bool)
+        av[5:9] = False
+        kw["avail"] = [av if i % 2 else None for i in range(len(loads))]
+    elif config == "priced":
+        # pricing steers, the ledger enforces — both at once
+        kw.update(capacity=np.full(t.n, 3.0), cap_beta=1.5, cap_frac=0.5)
+    elif config == "tight":
+        kw["residual"] = np.full(t.n, 1, np.int64)   # heavy truncation
+    dev = solve_congestion(t, loads, 4, record_rounds=True,
+                           device_loop=True, **kw)
+    host = solve_congestion(t, loads, 4, record_rounds=True,
+                            device_loop=False, **kw)
+    _assert_bit_identical(dev, host)
+
+
+@pytest.mark.parametrize("device_loop", [True, False])
+def test_admission_placements_feasible_wholesale(device_loop):
+    """The returned wave never overdraws any switch — that is the whole
+    point of moving admission inside the loop — and the reported ledger
+    deltas are exact."""
+    t, loads = _fleet(T=12)
+    residual = np.full(t.n, 2, np.int64)
+    res = solve_congestion(t, loads, 4, residual=residual,
+                           device_loop=device_loop)
+    claims = res.blue.sum(axis=0).astype(np.int64)
+    assert (claims <= residual).all()
+    after, = res.residual_after
+    assert np.array_equal(after, residual - claims)
+    assert (after >= 0).all()
+    # dropped counts are per-tenant claims the ledger refused
+    assert res.admission_dropped.shape == (len(loads),)
+    assert (res.admission_dropped >= 0).all()
+
+
+def test_admission_zero_residual_switches_are_hard_unavailable():
+    t, loads = _fleet(T=4)
+    residual = np.full(t.n, 2, np.int64)
+    residual[3:10] = 0
+    for device_loop in (True, False):
+        res = solve_congestion(t, loads, 4, residual=residual,
+                               device_loop=device_loop)
+        assert not res.blue[:, 3:10].any()
+
+
+def test_admission_fleet_per_tree_ledgers_bit_identical():
+    fleet = build_fleet(2, 2, 2, 4)
+    trees = [tp.tree for tp in fleet.topos]
+    tree_of = [0, 0, 0, 1, 1, 1]
+    loads = [sample_load(trees[g], "power-law", seed=7 + i)
+             for i, g in enumerate(tree_of)]
+    residual = [np.full(tr.n, 2, np.int64) for tr in trees]
+    kw = dict(core_rho=fleet.core_rho, core_path=fleet.core_path,
+              residual=residual, record_rounds=True)
+    dev = solve_fleet(trees, loads, tree_of, 3, device_loop=True, **kw)
+    host = solve_fleet(trees, loads, tree_of, 3, device_loop=False, **kw)
+    _assert_bit_identical(dev, host)
+    for g, tr in enumerate(trees):
+        rows = [i for i, gg in enumerate(tree_of) if gg == g]
+        claims = dev.blue[rows, : tr.n].sum(axis=0).astype(np.int64)
+        assert (claims <= residual[g]).all()
+        assert np.array_equal(dev.residual_after[g], residual[g] - claims)
+
+
+# -- boundary validation (engine + planner) -----------------------------------
+
+def test_solve_boundary_rejects_malformed_knobs():
+    t, loads = _fleet(n=16, T=2)
+    good = np.full(t.n, 2, np.int64)
+    for bad_frac in (0.0, 1.5, -0.25, float("nan")):
+        with pytest.raises(ValueError, match="cap_frac"):
+            solve_congestion(t, loads, 2, capacity=np.full(t.n, 2.0),
+                             cap_frac=bad_frac)
+    for bad_beta in (-1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="cap_beta"):
+            solve_congestion(t, loads, 2, capacity=np.full(t.n, 2.0),
+                             cap_beta=bad_beta)
+    with pytest.raises(ValueError, match="non-negative"):
+        cap = np.full(t.n, 2.0)
+        cap[0] = -1.0
+        solve_congestion(t, loads, 2, capacity=cap)
+    with pytest.raises(ValueError, match="residual shape"):
+        solve_congestion(t, loads, 2, residual=good[:-1])
+    with pytest.raises(ValueError, match="integer-valued"):
+        solve_congestion(t, loads, 2, residual=np.full(t.n, 1.5))
+    with pytest.raises(ValueError, match="non-negative"):
+        bad = good.copy()
+        bad[2] = -1
+        solve_congestion(t, loads, 2, residual=bad)
+
+
+def test_plan_congestion_residual_boundary():
+    topo = fleet_tree(2, 4, 4)
+    n = topo.tree.n
+    with pytest.raises(ValueError, match="plan_congestion: residual shape"):
+        plan_congestion(topo, 3, count=2, residual=np.ones(n - 1, np.int64))
+    with pytest.raises(ValueError, match="integer-valued"):
+        plan_congestion(topo, 3, count=2, residual=np.full(n, 0.5))
+    with pytest.raises(ValueError, match="non-negative"):
+        bad = np.full(n, 2, np.int64)
+        bad[0] = -2
+        plan_congestion(topo, 3, count=2, residual=bad)
+    cp = plan_congestion(topo, 3, count=2, residual=np.full(n, 2))
+    claims = np.zeros(n, np.int64)
+    for p in cp.plans:
+        claims += p.blue
+    assert (claims <= 2).all()
+
+
+# -- orchestrator: one-solve admission, preemption, telemetry -----------------
+
+def _orch(k=4, capacity=2):
+    topo = fleet_tree(2, 4, 4)
+    return Orchestrator(topo, OrchestratorConfig(k=k, capacity=capacity))
+
+
+def test_device_admission_one_solve_where_host_path_collides():
+    """The acceptance scenario: a T=16 wave on a capacity-2 fleet. The
+    host path admits serially and pays a re-solve per collision; the
+    device path gets the whole feasible wave from ONE solve — >= 2x
+    fewer host<->device admission round trips and zero evictions."""
+    host = _orch()
+    host.begin_workloads(16, congestion_aware=True, max_rounds=2)
+    h = host.last_admission
+    assert h["path"] == "host" and h["collisions"] >= 1
+    assert h["round_trips"] == 1 + h["collisions"]
+
+    dev = _orch()
+    progs = dev.begin_workloads(16, congestion_aware=True,
+                                device_admission=True, max_rounds=2)
+    d = dev.last_admission
+    assert len(progs) == 16
+    assert d["path"] == "device"
+    assert d["solves"] == 1 and d["round_trips"] == 1
+    assert d["collisions"] == 0 and d["preempted"] == ()
+    assert h["round_trips"] >= 2 * d["round_trips"]
+    assert (dev._residual >= 0).all()
+    # ledger conservation: residual + own blue + registered claims == cap
+    claims = dev.blue.astype(np.int64).copy()
+    for j in dev.jobs.values():
+        claims += j.blue.astype(np.int64)
+    assert np.array_equal(dev._residual + claims,
+                          np.full(dev.topo.tree.n, 2, np.int64))
+
+
+def test_device_admission_matches_engine_ledger_reference():
+    """The orchestrator's admitted masks ARE the engine's: replaying the
+    same residual ledger through solve_congestion (host reference path)
+    reproduces them bit for bit."""
+    orch = _orch()
+    residual = orch._residual.copy()
+    avail = orch._avail()
+    orch.begin_workloads(6, congestion_aware=True, device_admission=True,
+                         max_rounds=2)
+    ref = solve_congestion(orch.topo.tree, [orch.topo.load] * 6, orch.cfg.k,
+                           avail=[avail] * 6, residual=residual,
+                           device_loop=False, max_rounds=2)
+    admitted = np.stack([j.blue for j in
+                         sorted(orch.jobs.values(),
+                                key=lambda j: j.order)])
+    assert np.array_equal(admitted, ref.blue)
+
+
+def test_preemption_policies_order_victims():
+    lo = dict(tree=0, blue=np.zeros(1, bool), utilization=0.0)
+    from repro.runtime import JobRecord
+    jobs = [JobRecord(job_id=1, priority=2, order=1, benefit=5.0, **lo),
+            JobRecord(job_id=2, priority=0, order=2, benefit=1.0, **lo),
+            JobRecord(job_id=3, priority=1, order=3, benefit=9.0, **lo)]
+    assert [j.job_id for j in
+            PreemptionPolicy("priority").order_victims(jobs)] == [2, 3, 1]
+    assert [j.job_id for j in
+            PreemptionPolicy("youngest-first").order_victims(jobs)] \
+        == [3, 2, 1]
+    assert [j.job_id for j in
+            PreemptionPolicy("cheapest-regression").order_victims(jobs)] \
+        == [2, 1, 3]
+    with pytest.raises(ValueError):
+        PreemptionPolicy("oldest")
+    with pytest.raises(ValueError):
+        PreemptionPolicy("priority", max_victims=0)
+
+
+def test_preemptive_admission_evicts_then_fits():
+    orch = _orch()
+    # leave the ledger scarce-but-nonzero (an exhausted switch is simply
+    # unavailable; preemption engages on in-loop truncation), then admit
+    # a wave the remaining capacity cannot cover
+    for _ in range(3):
+        orch.begin_workload(priority=1)
+    before_jobs = set(orch.jobs)
+    progs = orch.begin_workloads(
+        8, congestion_aware=True, device_admission=True,
+        preemption=PreemptionPolicy("priority"), priority=0, max_rounds=2)
+    a = orch.last_admission
+    assert len(progs) == 8
+    assert a["solves"] == 2 and tuple(a["preempted"])
+    assert set(a["preempted"]) <= before_jobs
+    assert orch.preemption_events[-1]["policy"] == "priority"
+    assert orch.preemption_events[-1]["freed"] > 0
+    assert (orch._residual >= 0).all()
+    # evicted jobs left the registry; their claims returned to the ledger
+    claims = orch.blue.astype(np.int64).copy()
+    for j in orch.jobs.values():
+        claims += j.blue.astype(np.int64)
+    assert np.array_equal(orch._residual + claims,
+                          np.full(orch.topo.tree.n, 2, np.int64))
+
+
+def test_release_workloads_frees_ledger_exactly():
+    orch = _orch()
+    orch.begin_workloads(4, congestion_aware=True, device_admission=True,
+                         max_rounds=2)
+    ids = sorted(orch.jobs)
+    res0 = orch._residual.copy()
+    held = sum(int(orch.jobs[i].blue.sum()) for i in ids[:2])
+    freed = orch.release_workloads(ids[:2])
+    assert freed == held
+    assert int((orch._residual - res0).sum()) == freed
+    with pytest.raises(KeyError):
+        orch.release_workloads([ids[0]])          # already released
+
+
+def test_admission_cache_serves_identical_wave():
+    a, b = _orch(), _orch()
+    a.begin_workloads(4, congestion_aware=True, device_admission=True)
+    blues_a = [j.blue.copy() for j in sorted(a.jobs.values(),
+                                             key=lambda j: j.order)]
+    # same orchestrator state recurs -> cache hit, zero solves
+    b.begin_workloads(4, congestion_aware=True, device_admission=True)
+    b.release_workloads(sorted(b.jobs))
+    b.begin_workloads(4, congestion_aware=True, device_admission=True)
+    t = b.last_admission
+    assert t["cache_hit"] and t["solves"] == 0 and t["round_trips"] == 0
+    blues_b = [j.blue.copy() for j in sorted(b.jobs.values(),
+                                             key=lambda j: j.order)]
+    for x, y in zip(blues_a, blues_b, strict=True):
+        assert np.array_equal(x, y)
+
+
+def test_device_admission_guardrails():
+    orch = _orch()
+    with pytest.raises(ValueError, match="congestion_aware"):
+        orch.begin_workloads(2, device_admission=True)
+    with pytest.raises(ValueError, match="device_admission"):
+        orch.begin_workloads(2, congestion_aware=True,
+                             preemption=PreemptionPolicy())
+    with pytest.raises(ValueError, match="residual"):
+        orch.begin_workloads(2, congestion_aware=True, device_admission=True,
+                             residual=np.ones(orch.topo.tree.n, np.int64))
+
+
+def test_fleet_device_admission_per_tree():
+    fleet = build_fleet(2, 2, 2, 4)
+    orch = Orchestrator(fleet, OrchestratorConfig(k=3, capacity=2))
+    progs = orch.begin_workloads(fleet=[3, 3], congestion_aware=True,
+                                 device_admission=True, max_rounds=2)
+    assert len(progs) == 6
+    a = orch.last_admission
+    assert a["path"] == "device" and a["collisions"] == 0
+    assert a["solves"] == 1
+    for g, res_g in enumerate(orch._residuals):
+        assert (res_g >= 0).all()
+        claims = np.zeros(res_g.shape[0], np.int64)
+        for j in orch.jobs.values():
+            if j.tree == g:
+                claims += j.blue.astype(np.int64)
+        if g == 0:
+            claims += orch.blue.astype(np.int64)
+        assert np.array_equal(res_g + claims,
+                              np.full(res_g.shape[0], 2, np.int64))

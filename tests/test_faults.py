@@ -419,6 +419,67 @@ def test_training_coupled_chaos_single_device(tmp_path):
         ChaosHarness(t2.orch, trainer=t2).step(FaultEvent("crash"))
 
 
+# -- admission / preemption claim-ledger fuzz (PR 10) -------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_claim_ledger_conservation_under_admission_interleavings(seed):
+    """Property: across random interleavings of device-admission waves,
+    preemptive admissions, job releases, switch failures, partial
+    capacity degrades, and recoveries, every tree's residual plus its
+    registered claims reconstructs the effective per-switch capacity and
+    the residual never goes negative. The harness's per-step
+    ``check_invariants`` raises on the first violation."""
+    from repro.runtime import PreemptionPolicy
+    topo = fleet_tree(2, 2, 2)
+    cfg = OrchestratorConfig(k=2, capacity=2, straggler_quantile=0.5)
+    orch = Orchestrator(topo, cfg)
+    h = ChaosHarness(orch, verify_cache_hits=False)
+    rng = np.random.default_rng(seed)
+    n = topo.tree.n
+    blocked: set[int] = set()
+    degraded: set[int] = set()
+    for _ in range(12):
+        ops = ["admit", "preempt", "release"]
+        if len(blocked) + 1 <= n // 2:
+            ops.append("fail_switch")
+        if blocked:
+            ops.append("recover_switch")
+        free = [v for v in range(n)
+                if v not in degraded and v not in blocked]
+        if free:
+            ops.append("degrade_switch")
+        if degraded:
+            ops.append("recover_capacity")
+        op = str(rng.choice(ops))
+        if op == "admit":
+            ev = FaultEvent("admit_jobs", count=int(rng.integers(1, 3)))
+        elif op == "preempt":
+            ev = FaultEvent("preempt_admit", count=int(rng.integers(1, 3)),
+                            policy=str(rng.choice(PreemptionPolicy.KINDS)))
+        elif op == "release":
+            ev = FaultEvent("release_jobs", count=int(rng.integers(1, 3)))
+        elif op == "fail_switch":
+            s = int(rng.choice([v for v in range(n) if v not in blocked]))
+            blocked.add(s)
+            ev = FaultEvent("fail_switch", switches=(s,))
+        elif op == "recover_switch":
+            s = int(rng.choice(sorted(blocked)))
+            blocked.discard(s)
+            ev = FaultEvent("recover_switch", switches=(s,))
+        elif op == "degrade_switch":
+            s = int(rng.choice(free))
+            degraded.add(s)
+            ev = FaultEvent("degrade_switch", rates=((s, 0.5),))
+        else:
+            s = int(rng.choice(sorted(degraded)))
+            degraded.discard(s)
+            ev = FaultEvent("recover_switch_capacity", rates=((s, 1.0),))
+        h.step(ev)
+        assert (orch._residual >= 0).all()
+    assert h.invariant_checks == 12
+
+
 @pytest.mark.slow
 def test_degraded_executor_and_training_subprocess():
     """8-device shard_map: degraded programs bitwise-identical to the
